@@ -1,0 +1,59 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.core as core
+from repro.core import envs
+from repro.data import dirichlet_partition, make_classification
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out   # us/call
+
+
+def train_dqn_agent(episodes=8, horizon=40, p_good=0.5, calibrate=True,
+                    seed=0, track_loss=False):
+    """Algorithm 1 on the DT-simulated environment."""
+    p = envs.EnvParams(horizon=horizon, p_good=p_good, calibrate_dt=calibrate)
+    dcfg = core.DQNConfig(buffer_size=1024, batch_size=32, lr=2e-3)
+    agent = core.init_dqn(jax.random.PRNGKey(seed), dcfg)
+    key = jax.random.PRNGKey(seed + 1)
+    step_env = jax.jit(envs.step, static_argnums=2)
+    losses, rewards, energies, agg_counts = [], [], [], []
+    for ep in range(episodes):
+        s, obs = envs.reset(jax.random.fold_in(key, ep), p)
+        done, tot, e_tot, aggs = False, 0.0, 0.0, 0
+        while not done:
+            key, ka, kt = jax.random.split(key, 3)
+            a = core.select_action(ka, agent, dcfg, obs)
+            s, obs2, r, done, info = step_env(s, a, p)
+            agent = core.store(agent, obs, a, r, obs2)
+            agent, td = core.dqn_train_step(kt, agent, dcfg)
+            losses.append(float(td))
+            obs = obs2
+            tot += float(r)
+            e_tot += float(info["consumed"])
+            aggs += 1
+        rewards.append(tot)
+        energies.append(e_tot)
+        agg_counts.append(aggs)
+    return dict(agent=agent, dcfg=dcfg, td_losses=losses, rewards=rewards,
+                energies=energies, agg_counts=agg_counts, params=p)
+
+
+def fed_setup(n_devices=16, n=4096, dim=784, seed=0):
+    key = jax.random.PRNGKey(seed)
+    data = make_classification(key, n=n, dim=dim)
+    parts = dirichlet_partition(key, data.y, n_devices)
+    return data, parts

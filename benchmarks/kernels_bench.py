@@ -1,0 +1,41 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall-time and,
+more importantly on this CPU container, HBM-traffic *models* for the TPU
+target (the numbers the §Perf analysis uses)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, trust_aggregate
+from .common import timed
+
+
+def bench_trust_aggregate():
+    key = jax.random.PRNGKey(0)
+    for C, N in [(16, 1 << 20), (64, 1 << 20)]:
+        x = jax.random.normal(key, (C, N), jnp.float32)
+        w = jax.nn.softmax(jax.random.normal(key, (C,)))
+        us_ref, _ = timed(jax.jit(ref.trust_aggregate_ref), x, w)
+        print(f"kernels,trust_aggregate_ref_C{C}_us,{us_ref:.1f}")
+        # analytic TPU traffic: kernel = C*N*4 + N*4 bytes single pass
+        bytes_kernel = (C + 1) * N * 4
+        print(f"kernels,trust_aggregate_traffic_GB_C{C},{bytes_kernel/1e9:.3f}")
+
+
+def bench_attention_traffic_model():
+    """Flash vs unfused attention HBM bytes at prefill_32k geometry."""
+    S, H, d, B = 32768, 16, 256, 2      # per-chip gemma-7b prefill slice
+    unfused = (B * H * S * S * 4) * 2 + B * S * H * d * 2 * 3
+    flash = B * S * H * d * 2 * 4
+    print(f"kernels,attn_unfused_traffic_GB,{unfused/1e9:.1f}")
+    print(f"kernels,attn_flash_traffic_GB,{flash/1e9:.1f}")
+    print(f"kernels,attn_traffic_reduction_x,{unfused/flash:.0f}")
+
+
+def main():
+    bench_trust_aggregate()
+    bench_attention_traffic_model()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline table from dry-run records (benchmarks/dryrun_results.jsonl).
+
+Reads the JSONL emitted by ``python -m repro.launch.dryrun`` and prints the
+§Roofline table: three terms (seconds), dominant bottleneck, MODEL_FLOPS
+(6·N·D dense / 6·N_active·D MoE for train; 2·N·B per token for decode) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.plans import SHAPES
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Global analytic model FLOPs for one step of (arch, shape)."""
+    cfg = get_config(arch)
+    n_active = cfg.param_count(active_only=True)
+    spec = SHAPES[shape]
+    if spec["kind"] == "train":
+        tokens = spec["seq"] * spec["global_batch"]
+        return 6.0 * n_active * tokens
+    if spec["kind"] == "prefill":
+        tokens = spec["seq"] * spec["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec["global_batch"]
+
+
+def load(paths):
+    recs = {}
+    for path in paths:
+        try:
+            with open(path) as f:
+                for line in f:
+                    r = json.loads(line)
+                    recs[(r["arch"], r["shape"], r["mesh"])] = r
+        except FileNotFoundError:
+            pass
+    return recs
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    header = (f"{'arch':<18} {'shape':<12} {'t_comp':>9} {'t_mem':>9} "
+              f"{'t_coll':>9} {'bound':<6} {'MF/HLO':>7} {'mem_GB':>7} status")
+    print(header)
+    print("-" * len(header))
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] != "ok":
+            print(f"{a:<18} {s:<12} {'-':>9} {'-':>9} {'-':>9} {'-':<6} "
+                  f"{'-':>7} {'-':>7} {r['status'][:40]}")
+            continue
+        tc, tm, tl = r["t_compute"], r["t_memory"], r["t_collective"]
+        bound = max((tc, "comp"), (tm, "mem"), (tl, "coll"))[1]
+        mf = model_flops(a, s) / r["chips"]           # per-device
+        ratio = mf / max(r["hlo_flops_per_dev"], 1.0)
+        mem_gb = r["bytes_per_device"]["total"] / 1e9
+        rows.append((a, s, tc, tm, tl, bound, ratio, mem_gb))
+        print(f"{a:<18} {s:<12} {tc:9.4f} {tm:9.4f} {tl:9.4f} {bound:<6} "
+              f"{ratio:7.3f} {mem_gb:7.1f} ok")
+    return rows
+
+
+def main(paths=None):
+    if paths is None:
+        argv = [a for a in sys.argv[1:] if not a.startswith("-")
+                and a.endswith(".jsonl")]
+        paths = argv or ["benchmarks/dryrun_results.jsonl",
+                         "benchmarks/dryrun_results_multipod.jsonl"]
+    recs = load(paths)
+    if not recs:
+        print("roofline,no_dryrun_records,0")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        if any(m == mesh for (_, _, m) in recs):
+            print(f"\n== mesh {mesh} ==")
+            table(recs, mesh)
+
+
+if __name__ == "__main__":
+    main()

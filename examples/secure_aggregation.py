@@ -1,0 +1,29 @@
+"""Secure aggregation demo: trust weighting vs robust baselines under a
+Byzantine label-flipping attack, with optional client-level DP.
+
+    PYTHONPATH=src python examples/secure_aggregation.py
+"""
+import jax
+
+import repro.core as core
+from repro.data import dirichlet_partition, make_classification
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, n=3072, dim=784)
+    parts = dirichlet_partition(key, data.y, 8)
+
+    print("aggregator,malicious,dp,final_acc")
+    for agg in ("fedavg", "trust", "median", "multi_krum"):
+        for dp in (0.0, 0.05):
+            cfg = core.AsyncFLConfig(
+                n_devices=8, n_clusters=2, local_batch=64, sim_seconds=10.0,
+                malicious_frac=0.25, aggregator=agg,
+                dp_clip=5.0 if dp else 0.0, dp_noise=dp, seed=3)
+            tr = core.AsyncFederation(cfg, data, parts).run(eval_every=5.0)
+            print(f"{agg},0.25,{dp},{tr.accs[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

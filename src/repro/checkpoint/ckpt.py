@@ -1,0 +1,68 @@
+"""Pytree checkpointing to .npz (offline container — no orbax).
+
+Leaves are flattened with '/'-joined key paths; structure and dtypes round-trip
+exactly.  Device arrays are fetched host-side before serialization, so this
+works for sharded trees too (gathers — intended for the example-scale models;
+production sharded checkpointing would write per-shard files, noted in
+DESIGN.md as out of scope for the CPU container).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_BF16 = "__bf16__:"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16 codec: store as f32 with a dtype marker
+            flat[_BF16 + key] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, step: int, tree: Any) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, **_flatten(tree))
+    return fname
+
+
+def load_checkpoint(fname: str, like: Any) -> Any:
+    with np.load(fname) as data:
+        flat = {k: data[k] for k in data.files}
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if _BF16 + key in flat:
+            arr = flat[_BF16 + key].astype(jnp.bfloat16)
+        else:
+            arr = flat[key]
+        leaves.append(jnp.asarray(
+            arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(path: str) -> str | None:
+    if not os.path.isdir(path):
+        return None
+    files = [f for f in os.listdir(path) if re.match(r"ckpt_\d+\.npz$", f)]
+    if not files:
+        return None
+    return os.path.join(path, sorted(files)[-1])

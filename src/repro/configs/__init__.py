@@ -1,0 +1,40 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned config;
+``get_smoke_config(arch_id)`` returns the reduced same-family variant
+(<=2 layers-per-pattern-repeat, d_model<=512, <=4 experts) used by the
+CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models import ArchConfig
+
+ARCH_IDS = [
+    "grok_1_314b", "qwen1_5_32b", "chameleon_34b", "falcon_mamba_7b",
+    "granite_3_8b", "musicgen_large", "recurrentgemma_2b",
+    "deepseek_v2_236b", "gemma_7b", "gemma_2b",
+]
+# CLI ids use dashes/dots; module names use underscores.
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIASES.update({"qwen1.5-32b": "qwen1_5_32b", "grok-1-314b": "grok_1_314b",
+                 "paper-mnist": "paper_mnist"})
+ARCH_IDS = ARCH_IDS + ["paper_mnist"]
+
+
+def _module(arch_id: str):
+    name = _ALIASES.get(arch_id, arch_id).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).SMOKE
+
+
+def all_arch_ids():
+    return [i for i in ARCH_IDS if i != "paper_mnist"]

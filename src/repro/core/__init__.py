@@ -1,0 +1,35 @@
+"""Core — the paper's contribution as composable JAX modules.
+
+twin        digital twins of the device fleet (Eqns 1-2)
+trust       subjective-logic trust & weighted aggregation (Eqns 4-6, 19)
+energy      compute/communication energy + Markov channel (Eqns 7-8)
+lyapunov    dynamic deficit queue & drift-plus-penalty (Eqns 12-15)
+dqn         adaptive aggregation-frequency agent (Alg. 1, Eqns 16-18)
+envs        DT-simulated FL environment the agent trains in (§IV-C)
+clustering  K-means device clustering + tolerance bound (Alg. 2)
+async_fl    asynchronous clustered federation orchestrator (§IV-D)
+fl_step     distributed train/serve steps for the assigned architectures
+mlp         the paper's device-scale classifier
+"""
+from .twin import TwinState, init_twins, sample_deviation, calibrate, \
+    calibrated_freq, observe_round
+from .trust import (belief, gradient_diversity, learning_quality,
+                    time_weighted_average, trust_weighted_average,
+                    trust_weights, update_reputation)
+from .energy import ChannelParams, compute_energy, comm_energy, \
+    channel_transition, step_channel
+from .lyapunov import DeficitQueue, init_queue, step_queue, \
+    drift_penalty_reward, v_schedule
+from .dqn import DQNConfig, DQNState, init_dqn, select_action, store, \
+    train_step as dqn_train_step, q_values, epsilon
+from .clustering import kmeans, cluster_devices, tolerance_bound
+from .fl_step import (MODE_A, MODE_B, TrainState, build_train_step,
+                      build_serve_step, build_init_fn, train_state_specs,
+                      batch_specs, normalize_weights, intra_cluster_agg,
+                      inter_cluster_agg, client_divergence)
+from .async_fl import AsyncFLConfig, AsyncFederation, FLTrace, \
+    run_sync_baseline
+from .mlp import init_mlp_classifier, mlp_logits, classifier_loss, accuracy
+from .robust import (krum, multi_krum, coordinate_median, trimmed_mean,
+                     AGGREGATORS)
+from .privacy import clip_update, dp_aggregate, add_gaussian_noise

@@ -1,0 +1,52 @@
+"""K-means node clustering for asynchronous FL (paper §IV-D step 1).
+
+Clusters devices by (data size, compute power) so same-cluster nodes have
+similar local-training wall time — eliminating the straggler effect.  Pure
+JAX (lax.fori_loop Lloyd iterations) so it can consume TwinState directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .twin import TwinState, calibrated_freq
+
+
+def _normalize(x):
+    mu = x.mean(0, keepdims=True)
+    sd = x.std(0, keepdims=True) + 1e-8
+    return (x - mu) / sd
+
+
+def kmeans(key, feats, k: int, iters: int = 25):
+    """feats: (n, d) -> (assignments (n,), centroids (k, d))."""
+    n = feats.shape[0]
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    cent = feats[init_idx]
+
+    def body(_, cent):
+        d2 = jnp.sum((feats[:, None] - cent[None]) ** 2, axis=-1)   # (n,k)
+        assign = jnp.argmin(d2, axis=1)
+        oh = jax.nn.one_hot(assign, k)                              # (n,k)
+        cnt = oh.sum(0)[:, None]
+        new = (oh.T @ feats) / jnp.maximum(cnt, 1.0)
+        return jnp.where(cnt > 0, new, cent)
+
+    cent = jax.lax.fori_loop(0, iters, body, cent)
+    d2 = jnp.sum((feats[:, None] - cent[None]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1), cent
+
+
+def cluster_devices(key, twins: TwinState, k: int):
+    """Cluster by (data size, calibrated compute power) per the paper."""
+    feats = _normalize(jnp.stack(
+        [twins.data_size, calibrated_freq(twins)], axis=1))
+    return kmeans(key, feats, k)
+
+
+def tolerance_bound(a, freq, t_min, alpha: float):
+    """Alg. 2 lines 4-6: cap local-update counts so a_i / f_i <= alpha*T_m
+    relative to the fastest cluster's local-update time T_m."""
+    t_local = a.astype(jnp.float32) / jnp.maximum(freq, 1e-6)
+    cap = jnp.floor(alpha * t_min * freq).astype(jnp.int32)
+    return jnp.where(t_local > alpha * t_min, jnp.maximum(cap, 1), a)

@@ -1,0 +1,145 @@
+"""DQN for adaptive aggregation-frequency calibration (paper §IV-B/C, Alg. 1).
+
+Pure-JAX DQN matching the paper's setup: two identical fully-connected
+networks (eval_net O and target_net O'), sized 48 x 200 x 10 by default
+(state dim x single hidden layer with 200 neurons x |actions|), experience
+replay, epsilon-greedy with a growing greed coefficient, periodic target-net
+sync, TD loss Eqns 16-18 optimized by SGD.
+
+Actions index the number of local updates a_i in {1..n_actions} between global
+aggregations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DQNConfig(NamedTuple):
+    state_dim: int = 48
+    hidden: int = 200
+    n_actions: int = 10
+    gamma: float = 0.9            # attenuation coefficient (paper §IV-B)
+    lr: float = 1e-3
+    buffer_size: int = 2048
+    batch_size: int = 64
+    target_sync: int = 50         # F_u: target_net update frequency
+    eps0: float = 0.1             # initial greed coefficient
+    eps_growth: float = 1e-3      # r: greed growth rate per step (-> 1.0)
+
+
+class Replay(NamedTuple):
+    s: jnp.ndarray       # (cap, state_dim)
+    a: jnp.ndarray       # (cap,) int32
+    r: jnp.ndarray       # (cap,)
+    s2: jnp.ndarray      # (cap, state_dim)
+    ptr: jnp.ndarray     # scalar int32
+    full: jnp.ndarray    # scalar bool
+
+
+class DQNState(NamedTuple):
+    eval_params: dict
+    target_params: dict
+    replay: Replay
+    step: jnp.ndarray    # scalar int32
+
+
+def _init_net(key, cfg: DQNConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda n: 1.0 / jnp.sqrt(n)
+    return {
+        "w1": jax.random.normal(k1, (cfg.state_dim, cfg.hidden)) * s(cfg.state_dim),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.hidden)) * s(cfg.hidden),
+        "b2": jnp.zeros((cfg.hidden,)),
+        "w3": jax.random.normal(k3, (cfg.hidden, cfg.n_actions)) * s(cfg.hidden),
+        "b3": jnp.zeros((cfg.n_actions,)),
+    }
+
+
+def q_values(params, s):
+    """Three fully-connected layers (paper §V network)."""
+    h = jax.nn.relu(s @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def init_dqn(key, cfg: DQNConfig) -> DQNState:
+    ke, _ = jax.random.split(key)
+    eval_p = _init_net(ke, cfg)
+    cap = cfg.buffer_size
+    rep = Replay(s=jnp.zeros((cap, cfg.state_dim)),
+                 a=jnp.zeros((cap,), jnp.int32),
+                 r=jnp.zeros((cap,)),
+                 s2=jnp.zeros((cap, cfg.state_dim)),
+                 ptr=jnp.zeros((), jnp.int32),
+                 full=jnp.zeros((), bool))
+    return DQNState(eval_params=eval_p,
+                    target_params=jax.tree.map(jnp.copy, eval_p),
+                    replay=rep, step=jnp.zeros((), jnp.int32))
+
+
+def epsilon(cfg: DQNConfig, step):
+    """Greed coefficient grows from eps0 toward 1 at rate r (Alg. 1 input)."""
+    return jnp.minimum(cfg.eps0 + cfg.eps_growth * step.astype(jnp.float32), 1.0)
+
+
+def select_action(key, state: DQNState, cfg: DQNConfig, s):
+    """epsilon-greedy (Alg. 1 line 5): greedy w.p. eps, random otherwise."""
+    kg, kr = jax.random.split(key)
+    greedy = jnp.argmax(q_values(state.eval_params, s))
+    rand = jax.random.randint(kr, (), 0, cfg.n_actions)
+    use_greedy = jax.random.uniform(kg) < epsilon(cfg, state.step)
+    return jnp.where(use_greedy, greedy, rand).astype(jnp.int32)
+
+
+def store(state: DQNState, s, a, r, s2) -> DQNState:
+    rep = state.replay
+    i = rep.ptr
+    rep = rep._replace(
+        s=rep.s.at[i].set(s), a=rep.a.at[i].set(a),
+        r=rep.r.at[i].set(r), s2=rep.s2.at[i].set(s2),
+        ptr=(i + 1) % rep.s.shape[0],
+        full=rep.full | (i + 1 >= rep.s.shape[0]))
+    return state._replace(replay=rep)
+
+
+def _td_loss(eval_params, target_params, cfg: DQNConfig, batch):
+    s, a, r, s2 = batch
+    q = q_values(eval_params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    # Eqn 17: y = r + gamma max_a' O(s', a'; w^-)
+    q2 = q_values(target_params, s2)
+    y = r + cfg.gamma * jnp.max(q2, axis=1)
+    y = jax.lax.stop_gradient(y)
+    # Eqn 16
+    return jnp.mean((y - q_sa) ** 2)
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def train_step(key, state: DQNState, cfg: DQNConfig) -> tuple:
+    """One Alg.-1 learning iteration: sample replay, SGD on TD loss
+    (Eqn 18), periodic target sync.  Returns (state, loss)."""
+    rep = state.replay
+    cap = rep.s.shape[0]
+    limit = jnp.where(rep.full, cap, jnp.maximum(rep.ptr, 1))
+    idx = jax.random.randint(key, (cfg.batch_size,), 0, limit)
+    batch = (rep.s[idx], rep.a[idx], rep.r[idx], rep.s2[idx])
+
+    loss, grads = jax.value_and_grad(_td_loss)(
+        state.eval_params, state.target_params, cfg, batch)
+    # clip: TD targets can spike when the deficit queue builds up
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, 5.0 / (gnorm + 1e-9))
+    eval_p = jax.tree.map(lambda p, g: p - cfg.lr * scale * g,
+                          state.eval_params, grads)
+
+    sync = (state.step % cfg.target_sync) == 0
+    target_p = jax.tree.map(
+        lambda t, e: jnp.where(sync, e, t), state.target_params, eval_p)
+    return state._replace(eval_params=eval_p, target_params=target_p,
+                          step=state.step + 1), loss

@@ -1,0 +1,128 @@
+"""DT-simulated federated-learning environment for DQN training (paper §IV).
+
+The paper's key systems claim: *the DRL agent interacts with the digital
+twins, not the physical devices* — "through DTs, the agent achieves the same
+training effect as the real environment at a lower cost" (§IV-C).  This module
+is that surrogate: a jit-able MDP whose dynamics come from the DT state
+(loss-decay curve with non-linear aggregation gain, Eqn-7/8 energy, Markov
+channel), used to train the frequency agent before deployment.  The *real*
+environment (actual federated training) lives in async_fl.py and is used by
+the benchmarks to validate the agent end-to-end.
+
+Observation layout (state_dim=48, matching the paper's 48 x 200 x 10 net):
+    [ loss, dloss, queue, round_frac, budget_frac,
+      onehot(last_action, 10), channel_fracs(3), mean_freq, mean_dev,
+      tau (mean hidden activation proxy), pad... ]
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .energy import (ChannelParams, channel_transition, comm_energy,
+                     compute_energy, step_channel)
+from .lyapunov import v_schedule
+from .twin import TwinState, calibrated_freq, init_twins, sample_deviation
+
+OBS_DIM = 48
+N_ACTIONS = 10
+
+
+class EnvParams(NamedTuple):
+    n_devices: int = 16
+    horizon: int = 100              # k: planned aggregation rounds
+    budget: float = 250.0           # beta * R_m (E_com ~ E_cmp regime)
+    p_good: float = 0.5             # stationary good-channel probability
+    kappa: float = 0.08             # loss-decay rate per local step
+    f_star: float = 0.1             # asymptotic loss
+    f0: float = 2.3                 # initial loss (ln 10)
+    v0: float = 1.0
+    v_growth: float = 0.02
+    noise: float = 0.01
+    reward_scale: float = 0.02      # keeps Q-values O(1) for stable TD
+    calibrate_dt: bool = True       # False => Fig-3 "with DT deviation" arm
+    channel: ChannelParams = ChannelParams()
+
+
+class EnvState(NamedTuple):
+    twins: TwinState
+    loss: jnp.ndarray               # scalar global loss F(w)
+    queue: jnp.ndarray              # scalar deficit queue Q(i)
+    spent: jnp.ndarray              # cumulative resource use
+    round: jnp.ndarray              # int32
+    channel: jnp.ndarray            # (n,) int32 per-device channel state
+    last_action: jnp.ndarray        # int32
+    key: jnp.ndarray
+
+
+def _obs(p: EnvParams, s: EnvState) -> jnp.ndarray:
+    ch = jax.nn.one_hot(s.channel, 3).mean(0)
+    feats = jnp.concatenate([
+        jnp.array([s.loss, p.f0 - s.loss, s.queue,
+                   s.round / p.horizon, s.spent / p.budget]),
+        jax.nn.one_hot(s.last_action, N_ACTIONS),
+        ch,
+        jnp.array([calibrated_freq(s.twins).mean(),
+                   jnp.abs(s.twins.freq_dev - s.twins.dev_estimate).mean(),
+                   jnp.tanh(s.loss)]),   # tau: mean-activation proxy
+    ])
+    return jnp.pad(feats, (0, OBS_DIM - feats.shape[0]))
+
+
+def reset(key, p: EnvParams):
+    kt, kd, kc, ks = jax.random.split(key, 4)
+    twins = sample_deviation(kd, init_twins(kt, p.n_devices))
+    channel = step_channel(
+        kc, jnp.zeros((p.n_devices,), jnp.int32), channel_transition(p.p_good))
+    s = EnvState(twins=twins, loss=jnp.asarray(p.f0),
+                 queue=jnp.zeros(()), spent=jnp.zeros(()),
+                 round=jnp.zeros((), jnp.int32), channel=channel,
+                 last_action=jnp.zeros((), jnp.int32), key=ks)
+    return s, _obs(p, s)
+
+
+def step(s: EnvState, action, p: EnvParams):
+    """action in [0, N_ACTIONS): a_i = action + 1 local steps this round.
+    Returns (state', obs, reward, done, info)."""
+    a = action.astype(jnp.float32) + 1.0
+    key, kc, kn, ke = jax.random.split(s.key, 4)
+
+    # --- energy (Eqn 7/8); DT deviation biases the *estimated* compute term
+    freq_true = s.twins.freq + s.twins.freq_dev
+    freq_est = calibrated_freq(s.twins) if p.calibrate_dt else s.twins.freq
+    e_cmp = compute_energy(freq_true, p.channel).mean()
+    e_cmp_est = compute_energy(freq_est, p.channel).mean()
+    e_com = comm_energy(s.channel, ke, p.channel).mean()
+    consumed = a * e_cmp + e_com
+    estimated = a * e_cmp_est + e_com
+
+    # --- loss decay with non-linear (diminishing) aggregation gain
+    decay = jnp.exp(-p.kappa * a / (1.0 + 0.05 * s.round.astype(jnp.float32)))
+    mis_est = jnp.abs(e_cmp_est - e_cmp) / jnp.maximum(e_cmp, 1e-6)
+    noise = p.noise * jax.random.normal(kn, ()) * (1.0 + 5.0 * mis_est)
+    new_loss = jnp.maximum(
+        p.f_star + (s.loss - p.f_star) * decay + noise, 0.0)
+
+    # --- Lyapunov deficit queue (Eqn 12)
+    per_slot = p.budget / p.horizon
+    queue = jnp.maximum(s.queue + consumed - per_slot, 0.0)
+
+    # --- reward (Eqn 15) using the DT-*estimated* cost
+    v = v_schedule(s.round, p.v0, p.v_growth)
+    reward = (v * (s.loss - new_loss) - s.queue * estimated) * p.reward_scale
+
+    channel = step_channel(kc, s.channel, channel_transition(p.p_good))
+    twins = s.twins._replace(loss=jnp.full_like(s.twins.loss, new_loss))
+    if p.calibrate_dt:
+        from .twin import calibrate
+        twins = calibrate(twins)
+    ns = EnvState(twins=twins, loss=new_loss, queue=queue,
+                  spent=s.spent + consumed, round=s.round + 1,
+                  channel=channel, last_action=action.astype(jnp.int32),
+                  key=key)
+    done = (ns.round >= p.horizon) | (ns.spent >= p.budget)
+    info = {"consumed": consumed, "e_com": e_com, "e_cmp": e_cmp,
+            "queue": queue, "good_frac": (s.channel == 0).mean()}
+    return ns, _obs(p, ns), reward, done, info

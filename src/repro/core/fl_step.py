@@ -1,0 +1,270 @@
+"""Distributed federated train/serve steps (the paper's technique as a
+first-class feature of the training framework).
+
+Two execution modes (DESIGN.md §2):
+
+Mode A — ``fedavg_replica`` (paper-faithful FedAvg):
+    params leaves carry leading (NC, C) dims = (clusters, clients/cluster),
+    sharded (pod, data).  Local training is vmap-ed over every client;
+    intra-cluster aggregation is the trust-weighted average (Eqn 6) over C;
+    inter-cluster aggregation is the time-weighted average (Eqn 19) over NC.
+
+Mode B — ``trust_fsdp`` (beyond-paper scale adaptation for 314B/236B):
+    params leaves carry a leading (NC,) cluster dim sharded over pod; within a
+    cluster, params are FSDP-sharded over data + TP over model.  Trust enters
+    as per-example loss weights, making the implicit gradient reduction the
+    trust-weighted aggregation (exact for a_i=1 FedSGD).
+
+Every step:  a_i local optimizer steps (DQN-chosen aggregation frequency),
+each with grad accumulation over n_micro microbatches, then aggregation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import (ArchConfig, decode_step, init_params, lm_loss,
+                      param_specs, weighted_lm_loss)
+from ..optim import Optimizer, apply_updates
+
+MODE_A = "fedavg_replica"
+MODE_B = "trust_fsdp"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    round: jnp.ndarray          # scalar int32 global round counter
+
+
+# --------------------------------------------------------------------- #
+# aggregation primitives (jnp; lowered to weighted collectives by GSPMD)
+# --------------------------------------------------------------------- #
+def normalize_weights(rep):
+    """(NC, C) raw reputations -> per-cluster normalized trust weights."""
+    rep = jnp.maximum(rep, 0.0)
+    return rep / (jnp.sum(rep, axis=-1, keepdims=True) + 1e-8)
+
+
+def intra_cluster_agg(params, w):
+    """Eqn 6 over the client dim. leaves (NC, C, ...); w (NC, C)."""
+    def agg(x):
+        return jnp.einsum("nc...,nc->n...", x, w.astype(x.dtype))
+    return jax.tree.map(agg, params)
+
+
+def inter_cluster_agg(params, staleness):
+    """Eqn 19 over the cluster dim. leaves (NC, ...); staleness (NC,)."""
+    w = (jnp.e / 2.0) ** (-staleness.astype(jnp.float32))
+    w = w / (jnp.sum(w) + 1e-8)
+    def agg(x):
+        return jnp.einsum("n...,n->...", x, w.astype(x.dtype))
+    return jax.tree.map(agg, params)
+
+
+def client_divergence(params):
+    """||w_i - w̄||_2 per client — Eqn 4 learning-quality signal.
+    leaves (NC, C, ...) -> (NC, C)."""
+    def sq(x):
+        mean = jnp.mean(x, axis=1, keepdims=True)
+        d = (x - mean).astype(jnp.float32)
+        return jnp.sum(d * d, axis=tuple(range(2, x.ndim)))
+    total = sum(sq(x) for x in jax.tree.leaves(params))
+    return jnp.sqrt(total)
+
+
+# --------------------------------------------------------------------- #
+# local update (shared by both modes; runs under vmap)
+# --------------------------------------------------------------------- #
+def _local_update(cfg: ArchConfig, opt: Optimizer, loss_fn, local_steps: int,
+                  accum_dtype, params, opt_state, batch):
+    """a_i local optimizer steps, each accumulating grads over microbatches.
+    batch leaves: (n_micro, Bm, ...).  accum_dtype bf16 halves the grad
+    buffer for the 30B+ mode-A replicas (DESIGN.md §5)."""
+
+    def one_step(carry, _):
+        params, opt_state = carry
+
+        def micro_body(acc, mb):
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            loss_acc, g_acc = acc
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params))
+        (loss_sum, g_sum), _ = jax.lax.scan(micro_body, zero, batch)
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+        grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32)
+                             if g.dtype == jnp.float32 else g / n_micro, g_sum)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), loss_sum / n_micro
+
+    if local_steps == 1:
+        # no scan wrapper: a trip-1 while loop double-buffers every
+        # params-shaped carry (measured +several GB/chip on grok train)
+        (params, opt_state), loss = one_step((params, opt_state), None)
+        return params, opt_state, loss
+    (params, opt_state), losses = jax.lax.scan(
+        one_step, (params, opt_state), None, length=local_steps)
+    return params, opt_state, losses[-1]
+
+
+# --------------------------------------------------------------------- #
+# step builders
+# --------------------------------------------------------------------- #
+def build_train_step(cfg: ArchConfig, opt: Optimizer, *, mode: str,
+                     local_steps: int = 1, remat: bool = True,
+                     q_chunk: int = 0, accum_dtype=jnp.float32,
+                     loss_fn: Callable | None = None) -> Callable:
+    """Returns train_step(state, batch, trust_rep, staleness) -> (state, metrics).
+
+    Mode A shapes: params (NC,C,...); batch leaves (NC,C,n_micro,Bm,...);
+                   trust_rep (NC,C); staleness (NC,).
+    Mode B shapes: params (NC,...);   batch leaves (NC,n_micro,Bm,...) plus
+                   batch["weights"] (NC,n_micro,Bm); trust_rep unused there.
+
+    ``loss_fn(params, microbatch) -> scalar`` overrides the default LM loss —
+    the paper-repro benchmarks plug the MLP classifier loss in here (the FL
+    control plane is model-agnostic; DESIGN.md §4).
+    """
+    if mode == MODE_A:
+        if loss_fn is None:
+            def loss_fn(params, mb):
+                return lm_loss(params, cfg, mb, remat=remat, q_chunk=q_chunk)
+
+        def train_step(state: TrainState, batch, trust_rep, staleness):
+            NC, C = trust_rep.shape
+            upd = functools.partial(_local_update, cfg, opt, loss_fn,
+                                    local_steps, accum_dtype)
+            # vmap over clusters, then clients
+            upd = jax.vmap(jax.vmap(upd))
+            params, opt_state, losses = upd(state.params, state.opt, batch)
+            div = client_divergence(params)
+            w = normalize_weights(trust_rep)
+            cluster_params = intra_cluster_agg(params, w)          # (NC, ...)
+            global_params = inter_cluster_agg(cluster_params, staleness)
+            # redistribute: every client of every cluster gets the global model
+            new_params = jax.tree.map(
+                lambda g, old: jnp.broadcast_to(
+                    g[None, None], old.shape).astype(old.dtype),
+                global_params, params)
+            metrics = {"loss": losses, "divergence": div,
+                       "trust_weights": w}
+            return TrainState(new_params, opt_state, state.round + 1), metrics
+
+        return train_step
+
+    if mode == MODE_B:
+        if loss_fn is None:
+            def loss_fn(params, mb):
+                return weighted_lm_loss(params, cfg, mb, mb["weights"],
+                                        remat=remat, q_chunk=q_chunk)
+
+        def train_step(state: TrainState, batch, trust_rep, staleness):
+            upd = functools.partial(_local_update, cfg, opt, loss_fn,
+                                    local_steps, accum_dtype)
+            upd = jax.vmap(upd)                                     # clusters
+            params, opt_state, losses = upd(state.params, state.opt, batch)
+            global_params = inter_cluster_agg(params, staleness)
+            new_params = jax.tree.map(
+                lambda g, old: jnp.broadcast_to(
+                    g[None], old.shape).astype(old.dtype),
+                global_params, params)
+            metrics = {"loss": losses}
+            return TrainState(new_params, opt_state, state.round + 1), metrics
+
+        return train_step
+
+    raise ValueError(mode)
+
+
+def build_serve_step(cfg: ArchConfig) -> Callable:
+    """serve_step(params, cache, tokens, step) -> (logits, cache).
+    Plain sharded decode (FL is train-time; DESIGN.md §4)."""
+    def serve_step(params, cache, tokens, step):
+        return decode_step(params, cache, cfg, tokens, step)
+    return serve_step
+
+
+# --------------------------------------------------------------------- #
+# state construction + sharding specs
+# --------------------------------------------------------------------- #
+def build_init_fn(cfg: ArchConfig, opt: Optimizer, *, mode: str,
+                  n_clusters: int, clients_per_cluster: int = 0,
+                  dtype=jnp.float32) -> Callable:
+    """init(key) -> TrainState with FL leading dims broadcast in."""
+    lead = ((n_clusters, clients_per_cluster) if mode == MODE_A
+            else (n_clusters,))
+
+    def init(key):
+        params = init_params(key, cfg, dtype)
+        opt_state = opt.init(params)
+        bcast = lambda x: jnp.broadcast_to(x, lead + x.shape)
+        params = jax.tree.map(bcast, params)
+        opt_state = jax.tree.map(bcast, opt_state)
+        return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
+
+    return init
+
+
+def _opt_specs_like(opt_name: str, pspecs, opt_state_shapes):
+    """PartitionSpecs for optimizer state, mirroring param specs."""
+    if opt_name in ("sgd",):                       # momentum tree or ()
+        if not jax.tree.leaves(opt_state_shapes):
+            return opt_state_shapes
+        return pspecs
+    if opt_name in ("adam", "adamw"):
+        return {"m": pspecs, "v": pspecs, "t": P()}
+    if opt_name == "adafactor":
+        def leaf_spec(ps, shapes):
+            # shapes: {"r": ..., "c": ...} or {"v": ...}
+            if "v" in shapes:
+                return {"v": ps}
+            parts = list(ps)
+            return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + parts[-1:]))}
+        acc = jax.tree.map(leaf_spec, pspecs, opt_state_shapes["acc"],
+                           is_leaf=lambda x: isinstance(x, P))
+        return {"acc": acc, "t": P()}
+    raise ValueError(opt_name)
+
+
+def train_state_specs(cfg: ArchConfig, state_shapes: TrainState, *,
+                      mode: str, opt_name: str, pod_axis=None,
+                      tp="model", tp_size=16) -> TrainState:
+    """Sharding-spec TrainState matching ``state_shapes`` (from eval_shape)."""
+    if mode == MODE_A:
+        leading = (pod_axis, "data")
+        fsdp, stack_axis = None, None
+    else:
+        leading = (pod_axis,)
+        fsdp = "data" if cfg.shard_scheme in ("ep_tp", "fsdp_tp") else None
+        stack_axis = "data" if cfg.shard_scheme == "stack_tp" else None
+    pspecs = param_specs(state_shapes.params, cfg, tp=tp, fsdp=fsdp,
+                         stack_axis=stack_axis, leading=leading,
+                         tp_size=tp_size)
+    ospecs = _opt_specs_like(opt_name, pspecs, state_shapes.opt)
+    return TrainState(pspecs, ospecs, P())
+
+
+def batch_specs(cfg: ArchConfig, batch_shapes, *, mode: str, pod_axis=None):
+    """Token batches: client dim over data (mode A) / batch dim over data
+    (mode B)."""
+    def spec(leaf):
+        nd = leaf.ndim
+        base = [None] * nd
+        base[0] = pod_axis
+        if mode == MODE_A:
+            if nd >= 2:
+                base[1] = "data"
+        else:
+            if nd >= 3:
+                base[2] = "data"       # (NC, n_micro, Bm, ...) -> Bm over data
+        return P(*base)
+    return jax.tree.map(spec, batch_shapes)

@@ -1,0 +1,49 @@
+"""Lyapunov dynamic deficit queue (paper §IV-A, Eqn 12).
+
+Turns the long-term resource budget of P1 into the per-slot drift-plus-penalty
+objective P2:
+
+    Q(i+1) = max{ Q(i) + (a_i E_cmp + E_com) - beta R_m / k, 0 }
+
+    P2: argmax_a  v (F(w_{i-1}) - F(w_i)) - Q(i) (a_i E_cmp + E_com)
+
+``v`` grows with the round index (paper: late-stage accuracy is costly, so the
+penalty trade-off shifts toward training performance over time).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class DeficitQueue(NamedTuple):
+    q: jnp.ndarray              # scalar (or per-cluster) backlog
+    budget: float               # beta * R_m: total resource budget
+    horizon: int                # k: planned number of aggregations
+
+    @property
+    def per_slot(self):
+        return self.budget / self.horizon
+
+
+def init_queue(budget: float, horizon: int, shape=()) -> DeficitQueue:
+    return DeficitQueue(q=jnp.zeros(shape, jnp.float32),
+                        budget=float(budget), horizon=int(horizon))
+
+
+def step_queue(queue: DeficitQueue, consumed) -> DeficitQueue:
+    """Eqn 12. ``consumed`` = a_i * E_cmp + E_com for the slot."""
+    q = jnp.maximum(queue.q + consumed - queue.per_slot, 0.0)
+    return queue._replace(q=q)
+
+
+def drift_penalty_reward(loss_prev, loss_cur, consumed, queue: DeficitQueue,
+                         v: float) -> jnp.ndarray:
+    """Eqn 15: R = v (F(w_{i-1}) - F(w_i)) - Q(i) (a_i E_cmp + E_com)."""
+    return v * (loss_prev - loss_cur) - queue.q * consumed
+
+
+def v_schedule(round_idx, v0: float = 1.0, growth: float = 0.01):
+    """v increases with training rounds (paper §IV-A)."""
+    return v0 * (1.0 + growth * round_idx)

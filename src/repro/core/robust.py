@@ -1,0 +1,86 @@
+"""Robust-aggregation baselines (the literature the paper positions
+against: §II "aggregation strategy").
+
+The paper's trust-weighted aggregation (Eqns 4-6) is compared in
+benchmarks/attack_bench.py against the standard Byzantine-robust rules:
+
+  krum / multi-krum   (Blanchard et al., 2017)
+  coordinate median   (Yin et al., 2018)
+  trimmed mean        (Yin et al., 2018)
+  fedavg              (unweighted mean — the vulnerable baseline)
+
+All operate on a pytree with leading client dim, like
+trust.trust_weighted_average.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _flat(tree):
+    leaves = jax.tree.leaves(tree)
+    C = leaves[0].shape[0]
+    return jnp.concatenate([x.reshape(C, -1).astype(jnp.float32)
+                            for x in leaves], axis=1)
+
+
+def _unflat_like(vec, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for x in leaves:
+        n = x[0].size
+        out.append(vec[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def krum_scores(flat, f: int):
+    """Sum of distances to the C-f-2 nearest neighbours, per client."""
+    C = flat.shape[0]
+    d2 = jnp.sum((flat[:, None] - flat[None]) ** 2, axis=-1)     # (C,C)
+    d2 = jnp.where(jnp.eye(C, dtype=bool), jnp.inf, d2)   # (0*inf = nan!)
+    k = max(1, C - f - 2)
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    return nearest.sum(axis=1)
+
+
+def krum(client_params, f: int = 1):
+    """Select the single client closest to its neighbours (Krum)."""
+    flat = _flat(client_params)
+    best = jnp.argmin(krum_scores(flat, f))
+    return jax.tree.map(lambda x: x[best], client_params)
+
+
+def multi_krum(client_params, f: int = 1, m: int | None = None):
+    """Average the m lowest-score clients (Multi-Krum)."""
+    flat = _flat(client_params)
+    C = flat.shape[0]
+    m = m or max(1, C - f)
+    scores = krum_scores(flat, f)
+    sel = jnp.argsort(scores)[:m]
+    mean = flat[sel].mean(axis=0)
+    return _unflat_like(mean, client_params)
+
+
+def coordinate_median(client_params):
+    flat = _flat(client_params)
+    return _unflat_like(jnp.median(flat, axis=0), client_params)
+
+
+def trimmed_mean(client_params, beta: float = 0.2):
+    """Drop the beta fraction of extremes per coordinate, then average."""
+    flat = _flat(client_params)
+    C = flat.shape[0]
+    k = int(C * beta)
+    s = jnp.sort(flat, axis=0)
+    s = s[k:C - k] if C - 2 * k >= 1 else s
+    return _unflat_like(s.mean(axis=0), client_params)
+
+
+AGGREGATORS = {
+    "krum": krum,
+    "multi_krum": multi_krum,
+    "median": coordinate_median,
+    "trimmed_mean": trimmed_mean,
+}

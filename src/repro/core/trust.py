@@ -1,0 +1,103 @@
+"""Trust-based aggregation (paper §III-C, Eqns 4-6).
+
+Belief of curator j in node i at slot t (Eqn 4):
+
+    b_{i->j}^t = (1 - u) * q / f̂_i  *  alpha / (alpha + beta)
+
+with u the packet-failure probability, q the learning quality (distance of the
+node's update from the honest majority, FoolsGold-style), f̂ the DT mapping
+deviation, and (alpha, beta) the positive/malicious interaction counts.
+
+Reputation (Eqn 5):  T_{i->j} = sum_t b^t + iota * u
+Aggregation (Eqn 6): w_k = sum_i T_i w_i / sum_i T_i
+
+All functions are jnp-pure; `trust_weighted_average` is the jnp oracle whose
+TPU hot path is kernels/trust_aggregate.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .twin import TwinState
+
+_EPS = 1e-8
+
+
+def learning_quality(updates_flat: jnp.ndarray) -> jnp.ndarray:
+    """q_{i->j} from Eqn 4: normalized distance of each client's update from
+    the mean update (honesty-of-the-majority assumption).  FoolsGold-style:
+    *small* distance from the majority direction => high quality; extreme
+    outliers (malicious / lazy) => low quality.
+
+    updates_flat: (n, P) flattened per-client parameter updates.
+    -> (n,) quality scores in (0, 1].
+    """
+    mean = jnp.mean(updates_flat, axis=0, keepdims=True)
+    dist = jnp.linalg.norm(updates_flat - mean, axis=1)           # (n,)
+    rel = dist / (jnp.sum(dist) + _EPS)                           # Eqn 4's ratio
+    # convert distance-share to quality: majority-consistent -> ~1
+    n = updates_flat.shape[0]
+    return jnp.clip(1.0 - rel * n / jnp.maximum(n - 1, 1), _EPS, 1.0)
+
+
+def gradient_diversity(updates_flat: jnp.ndarray) -> jnp.ndarray:
+    """FoolsGold signal [12]: max pairwise cosine similarity per client.
+    Sybil-coordinated clients share gradient direction (cs -> 1) and are
+    down-weighted."""
+    norm = updates_flat / (jnp.linalg.norm(updates_flat, axis=1, keepdims=True) + _EPS)
+    cs = norm @ norm.T
+    cs = cs - jnp.eye(cs.shape[0]) * 2.0       # exclude self
+    mx = jnp.max(cs, axis=1)
+    return jnp.clip(1.0 - jnp.maximum(mx, 0.0), _EPS, 1.0)
+
+
+def belief(twins: TwinState, quality, pkt_fail, diversity=None) -> jnp.ndarray:
+    """Eqn 4 with the DT deviation in the denominator (deviation-normalized
+    belief) and the subjective-logic interaction ratio."""
+    fdev = jnp.maximum(jnp.abs(twins.freq_dev - twins.dev_estimate), 1e-3)
+    inter = twins.alpha / (twins.alpha + twins.beta + _EPS)
+    b = (1.0 - pkt_fail) * quality / fdev * inter
+    if diversity is not None:
+        b = b * diversity
+    return b
+
+
+def update_reputation(rep, b, pkt_fail, iota: float = 0.1) -> jnp.ndarray:
+    """Eqn 5 (running form): accumulate belief + uncertainty term."""
+    return rep + b + iota * pkt_fail
+
+
+def trust_weights(rep) -> jnp.ndarray:
+    """Normalized aggregation weights: T_i / sum T (Eqn 6 numerator shares).
+    Degenerate fleet (all reputations <= 0) falls back to uniform weights —
+    found by the hypothesis simplex property test."""
+    rep = jnp.maximum(rep, 0.0)
+    total = jnp.sum(rep)
+    n = rep.shape[-1] if rep.ndim else 1
+    uniform = jnp.full_like(rep, 1.0 / max(n, 1))
+    return jnp.where(total > 1e-6, rep / jnp.maximum(total, 1e-6), uniform)
+
+
+def trust_weighted_average(client_params, weights):
+    """Eqn 6: weighted average over the leading client dim of a pytree.
+
+    client_params: pytree with leaves (n, ...); weights: (n,) summing to 1.
+    jnp oracle for kernels/trust_aggregate.py.
+    """
+    def wavg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0)
+    return jax.tree.map(wavg, client_params)
+
+
+def time_weighted_average(cluster_params, staleness, base: float = jnp.e / 2):
+    """Eqn 19: inter-cluster aggregation with exponential time decay
+    (e/2)^{-(t - timestamp_j)}, normalized over clusters.
+
+    cluster_params: pytree with leaves (n_clusters, ...)
+    staleness: (n_clusters,) = t - timestamp_j  (rounds since last update)
+    """
+    w = base ** (-staleness.astype(jnp.float32))
+    w = w / (jnp.sum(w) + _EPS)
+    return trust_weighted_average(cluster_params, w), w

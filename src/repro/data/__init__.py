@@ -1,0 +1,6 @@
+from .synthetic import (SyntheticClassification, make_classification,
+                        token_stream, lm_batches)
+from .federated import dirichlet_partition, federated_batches
+
+__all__ = ["SyntheticClassification", "make_classification", "token_stream",
+           "lm_batches", "dirichlet_partition", "federated_batches"]

@@ -1,0 +1,9 @@
+from .ops import attention, lru_scan, mamba_scan, trust_aggregate_tree
+from .trust_aggregate import trust_aggregate
+from .flash_attention import flash_attention
+from .selective_scan import selective_scan
+from .rglru_scan import rglru_scan
+
+__all__ = ["attention", "lru_scan", "mamba_scan", "trust_aggregate_tree",
+           "trust_aggregate", "flash_attention", "selective_scan",
+           "rglru_scan"]

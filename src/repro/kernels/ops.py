@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the Pallas
+interpreter executes the kernel body in Python for correctness validation);
+on a real TPU pass interpret=False and the same BlockSpecs compile to
+Mosaic.  ``INTERPRET`` flips the default globally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .rglru_scan import rglru_scan
+from .selective_scan import selective_scan
+from .trust_aggregate import trust_aggregate
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def trust_aggregate_tree(client_params, weights, *, interpret=None):
+    """Eqn 6 over a pytree with leading client dim, via the Pallas kernel."""
+    interpret = INTERPRET if interpret is None else interpret
+    leaves, treedef = jax.tree.flatten(client_params)
+    C = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.reshape(C, -1).astype(jnp.float32) for x in leaves], axis=1)
+    agg = trust_aggregate(flat, weights, interpret=interpret)
+    out, off = [], 0
+    for x in leaves:
+        n = x[0].size
+        out.append(agg[off:off + n].reshape(x.shape[1:]).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def attention(q, k, v, *, window=0, softcap=0.0, bq=256, bk=256,
+              interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return flash_attention(q, k, v, window=window, softcap=softcap,
+                           bq=bq, bk=bk, interpret=interpret)
+
+
+def mamba_scan(xc, dt, Bc, Cc, A, *, bd=512, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return selective_scan(xc, dt, Bc, Cc, A, bd=bd, interpret=interpret)
+
+
+def lru_scan(a, bx, *, bw=1024, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return rglru_scan(a, bx, bw=bw, interpret=interpret)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematical definition, written with no tiling or
+VMEM concerns; tests sweep shapes/dtypes and assert kernels match these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trust_aggregate_ref(params_flat, weights):
+    """Eqn 6: (C, N) x (C,) -> (N,)  trust-weighted parameter average."""
+    w = weights.astype(jnp.float32)
+    return jnp.einsum("cn,c->n", params_flat.astype(jnp.float32), w).astype(
+        params_flat.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """(B,S,H,d) x (B,S,H,d) x (B,S,H,dv) -> (B,S,H,dv), causal softmax
+    attention with optional sliding window and tanh logit cap."""
+    B, S, H, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -2.0e38)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(xc, dt, Bc, Cc, A):
+    """Mamba-1 recurrence.
+    xc,dt: (B,S,Di); Bc,Cc: (B,S,N); A: (Di,N) -> y (B,S,Di), h (B,Di,N)."""
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        dBx = (dt_t * xc_t)[..., None].astype(jnp.float32) * \
+            B_t[:, None, :].astype(jnp.float32)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    B, S, Di = xc.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(xc.dtype), h
+
+
+def rglru_scan_ref(a, bx):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + bx_t.
+    a, bx: (B,S,W) -> hs (B,S,W), h_last (B,W)."""
+    def step(h, inp):
+        a_t, bx_t = inp
+        h = a_t.astype(jnp.float32) * h + bx_t.astype(jnp.float32)
+        return h, h
+
+    B, S, W = a.shape
+    h0 = jnp.zeros((B, W), jnp.float32)
+    h, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(a.dtype), h

@@ -1,0 +1,227 @@
+"""Lowering plans: (architecture x input shape x mesh) -> step fn + abstract
+inputs + shardings.
+
+Used by dryrun.py (compile-only, ShapeDtypeStruct stand-ins, no allocation)
+and by train.py/serve.py (real arrays at example scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..core import fl_step as fl
+from ..models import (ArchConfig, cache_specs, init_cache, init_params,
+                      param_specs, prefill)
+from ..optim import adafactor
+from .mesh import axis_size
+
+SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4096,   global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,  global_batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,  global_batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288, global_batch=1),
+}
+
+# archs whose long_500k is inapplicable (pure full attention, no declared
+# sliding-window variant — DESIGN.md §4)
+LONG_SKIP_REASON = "skipped(full-attn)"
+
+
+@dataclasses.dataclass
+class Plan:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable            # jit-able
+    args: tuple                  # abstract (ShapeDtypeStruct) or concrete args
+    in_shardings: tuple
+    out_shardings: Any           # pytree or None
+    cfg: ArchConfig
+    donate: tuple = ()           # donated arg indices (state / cache aliasing)
+    skip: Optional[str] = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_struct(cfg, lead, batch, seq):
+    if cfg.num_codebooks > 1:
+        return _sds(lead + (batch, cfg.num_codebooks, seq), jnp.int32)
+    return _sds(lead + (batch, seq), jnp.int32)
+
+
+# --------------------------------------------------------------------- #
+def applicable(arch_id: str, shape_name: str) -> Optional[str]:
+    """None if runnable, else a skip reason."""
+    cfg = get_config(arch_id)
+    if shape_name == "long_500k" and not cfg.subquadratic \
+            and cfg.sliding_variant_window <= 0:
+        return LONG_SKIP_REASON
+    return None
+
+
+def train_plan(arch_id: str, shape_name: str, mesh,
+               param_dtype=jnp.bfloat16) -> Plan:
+    cfg = get_config(arch_id)
+    spec = SHAPES[shape_name]
+    seq, gbatch = spec["seq"], spec["global_batch"]
+    n_pods = axis_size(mesh, "pod")
+    n_data = axis_size(mesh, "data")
+    tp_size = axis_size(mesh, "model")
+    pod_axis = "pod" if n_pods > 1 else None
+    mode = cfg.fl_mode
+    NC = max(n_pods, 1)
+
+    big = cfg.param_count() * (2 if param_dtype == jnp.bfloat16 else 4) \
+        > 30e9 * 2
+    accum_dtype = jnp.bfloat16 if big else jnp.float32
+    # sequential leaf updates + bf16 update math bound optimizer temps
+    opt = adafactor(1e-2, sequential=big,
+                    compute_dtype=jnp.bfloat16 if big else None)
+    q_chunk = (512 if big else 1024) if seq >= 4096 else 0
+
+    if mode == fl.MODE_A:
+        C = n_data
+        # Bm=4 per microbatch: weights stream once per micro-step, so fewer
+        # micro-steps cut HBM traffic ~linearly while remat keeps the
+        # activation footprint bounded (§Perf pair 3, iter 3)
+        per_client = max(1, gbatch // (NC * C))
+        bm = min(2, per_client)   # Bm=4 breached HBM (16.3 GB); 2 balances
+        n_micro = max(1, per_client // bm)
+        lead = (NC, C, n_micro, bm)
+        batch = {"tokens": _token_struct(cfg, lead[:-1], bm, seq),
+                 "labels": _token_struct(cfg, lead[:-1], bm, seq)}
+    else:
+        bm = n_data
+        n_micro = max(1, gbatch // (NC * bm))
+        lead = (NC, n_micro, bm)
+        batch = {"tokens": _token_struct(cfg, lead[:-1], bm, seq),
+                 "labels": _token_struct(cfg, lead[:-1], bm, seq),
+                 "weights": _sds((NC, n_micro, bm), jnp.float32)}
+
+    init_fn = fl.build_init_fn(cfg, opt, mode=mode, n_clusters=NC,
+                               clients_per_cluster=n_data, dtype=param_dtype)
+    state_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    state_specs = fl.train_state_specs(cfg, state_shapes, mode=mode,
+                                       opt_name="adafactor",
+                                       pod_axis=pod_axis, tp_size=tp_size)
+    batch_sp = fl.batch_specs(cfg, batch, mode=mode, pod_axis=pod_axis)
+    rep = _sds((NC, n_data if mode == fl.MODE_A else 1), jnp.float32)
+    stale = _sds((NC,), jnp.float32)
+
+    step = fl.build_train_step(cfg, opt, mode=mode, local_steps=1,
+                               q_chunk=q_chunk, accum_dtype=accum_dtype)
+    ns = lambda s: jax.tree.map(lambda x: NamedSharding(mesh, x), s,
+                                is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(state_specs), ns(batch_sp), ns(P(None, None)), ns(P(None)))
+    out_sh = (ns(state_specs), None)
+    return Plan(arch_id, shape_name, "train", step,
+                (state_shapes, batch, rep, stale), in_sh, out_sh, cfg,
+                donate=(0,))
+
+
+def _serve_cfg(arch_id: str, shape_name: str) -> ArchConfig:
+    cfg = get_config(arch_id)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        cfg = cfg.long_context_variant()
+    return cfg
+
+
+def _serve_param_specs(cfg, tp_size):
+    fsdp = "data" if cfg.shard_scheme in ("ep_tp", "fsdp_tp") else None
+    stack_axis = "data" if cfg.shard_scheme == "stack_tp" else None
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    specs = param_specs(shapes, cfg, tp="model", fsdp=fsdp,
+                        stack_axis=stack_axis, tp_size=tp_size)
+    return shapes, specs
+
+
+def _cache_layout(cfg, batch, n_data, tp_size=16):
+    batch_axis = "data" if batch % n_data == 0 and batch >= n_data else None
+    kv_ok = (cfg.num_kv_heads > 1 and not cfg.use_mla
+             and cfg.num_kv_heads % tp_size == 0)
+    kv_axis = "model" if kv_ok else None
+    # kv-head count indivisible by the model axis: context-parallel KV cache
+    attn_seq_axis = ("model" if (cfg.num_kv_heads > 1 and not cfg.use_mla
+                                 and not kv_ok) else None)
+    seq_axis = "model" if cfg.use_mla else None
+    return dict(batch_axis=batch_axis, kv_axis=kv_axis, seq_axis=seq_axis,
+                state_axis="model", attn_seq_axis=attn_seq_axis)
+
+
+def decode_plan(arch_id: str, shape_name: str, mesh,
+                param_dtype=jnp.bfloat16) -> Plan:
+    skip = applicable(arch_id, shape_name)
+    cfg = _serve_cfg(arch_id, shape_name)
+    spec = SHAPES[shape_name]
+    seq, batch = spec["seq"], spec["global_batch"]
+    n_data = axis_size(mesh, "data")
+    tp_size = axis_size(mesh, "model")
+
+    pshapes, pspecs = _serve_param_specs(cfg, tp_size)
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, seq))
+    layout = _cache_layout(cfg, batch, n_data, tp_size)
+    cspecs = cache_specs(cache_shapes, **layout)
+
+    if cfg.num_codebooks > 1:
+        tok = _sds((batch, cfg.num_codebooks), jnp.int32)
+        tok_spec = P(layout["batch_axis"], None)
+    else:
+        tok = _sds((batch,), jnp.int32)
+        tok_spec = P(layout["batch_axis"])
+    step_pos = _sds((), jnp.int32)
+
+    step = fl.build_serve_step(cfg)
+    ns = lambda s: jax.tree.map(lambda x: NamedSharding(mesh, x), s,
+                                is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(cspecs), ns(tok_spec), ns(P()))
+    out_sh = (None, ns(cspecs))
+    return Plan(arch_id, shape_name, "decode", step,
+                (pshapes, cache_shapes, tok, step_pos), in_sh, out_sh, cfg,
+                donate=(1,), skip=skip)
+
+
+def prefill_plan(arch_id: str, shape_name: str, mesh,
+                 param_dtype=jnp.bfloat16) -> Plan:
+    cfg = _serve_cfg(arch_id, shape_name)
+    spec = SHAPES[shape_name]
+    seq, batch = spec["seq"], spec["global_batch"]
+    n_data = axis_size(mesh, "data")
+    tp_size = axis_size(mesh, "model")
+
+    pshapes, pspecs = _serve_param_specs(cfg, tp_size)
+    layout = _cache_layout(cfg, batch, n_data, tp_size)
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, seq))
+    cspecs = cache_specs(cache_shapes, **layout)
+    tok = _token_struct(cfg, (), batch, seq)
+    tok_spec = P(*([layout["batch_axis"]] + [None] * (tok.ndim - 1)))
+
+    def prefill_step(params, tokens):
+        return prefill(params, cfg, tokens, cache_len=seq, q_chunk=1024)
+
+    ns = lambda s: jax.tree.map(lambda x: NamedSharding(mesh, x), s,
+                                is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(tok_spec))
+    out_sh = (None, ns(cspecs))
+    return Plan(arch_id, shape_name, "prefill", prefill_step,
+                (pshapes, tok), in_sh, out_sh, cfg)
+
+
+def make_plan(arch_id: str, shape_name: str, mesh) -> Plan:
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return train_plan(arch_id, shape_name, mesh)
+    if kind == "prefill":
+        return prefill_plan(arch_id, shape_name, mesh)
+    return decode_plan(arch_id, shape_name, mesh)

@@ -1,0 +1,66 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler for §Perf iterations: lowers one (arch x shape), prints
+the roofline terms, the loop-weighted traffic breakdown by op kind, and the
+hottest loops.  This is the 'profile' the hypothesis->change->measure cycles
+read (no wall clock on CPU).
+
+    PYTHONPATH=src python -m repro.launch.profile --arch falcon-mamba-7b \
+        --shape train_4k [--save /tmp/x.hlo]
+"""
+import argparse
+
+import jax
+
+from .hlo_stats import analyze_module, loop_summary, traffic_breakdown
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from .plans import make_plan
+
+
+def profile(arch, shape, multi_pod=False, save=None):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(arch, shape, mesh)
+    with mesh:
+        j = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                    out_shardings=plan.out_shardings,
+                    donate_argnums=plan.donate)
+        compiled = j.lower(*plan.args).compile()
+    txt = compiled.as_text()
+    if save:
+        with open(save, "w") as f:
+            f.write(txt)
+    st = analyze_module(txt)
+    mem = compiled.memory_analysis()
+    coll_total = sum(st.collectives.values())
+    print(f"== {arch} x {shape} ({'2x16x16' if multi_pod else '16x16'}) ==")
+    print(f"t_compute    {st.flops / PEAK_FLOPS_BF16:10.3f}s   "
+          f"({st.flops:.3e} flop/dev)")
+    print(f"t_memory     {st.bytes_traffic / HBM_BW:10.3f}s   "
+          f"({st.bytes_traffic:.3e} B/dev)")
+    print(f"t_collective {coll_total / ICI_BW:10.3f}s   ({coll_total:.3e} B/dev)")
+    print(f"mem/dev: arg {mem.argument_size_in_bytes/1e9:.1f} + temp "
+          f"{mem.temp_size_in_bytes/1e9:.1f} GB")
+    print("collectives:", {k: f"{v:.2e}" for k, v in st.collectives.items()
+                           if v})
+    print("\ntraffic by op kind (loop-weighted):")
+    for k, v in traffic_breakdown(txt).items():
+        print(f"  {k:<22} {v:.3e} B  ({v/HBM_BW:8.3f}s)")
+    print("\nhottest loops (trip, per-iter B, total B):")
+    for trip, per, tot, name in loop_summary(txt):
+        print(f"  x{trip:<6} {per:.2e} -> {tot:.3e}  {name}")
+    return st, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.multi_pod, args.save)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Federated training driver.
+
+Runs the full control plane at example scale on the local devices:
+digital twins -> K-means clusters -> (optionally DQN-driven) aggregation
+frequency -> trust-weighted mode-A train steps on a reduced architecture.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --steps 50 --clients 4 --smoke
+
+``--smoke`` selects the reduced config (the full assigned configs only
+lower on the production mesh via dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from repro.configs import get_config, get_smoke_config
+from repro.core import envs
+from repro.data import token_stream
+from repro.optim import adam
+from repro.checkpoint import save_checkpoint
+
+
+def make_fed_lm_batch(key, cfg, n_clusters, clients, n_micro, bm, seq):
+    shape = (n_clusters, clients, n_micro, bm, seq + 1)
+    if cfg.num_codebooks > 1:
+        shape = shape[:-1] + (cfg.num_codebooks, seq + 1)
+    toks = token_stream(key, int(np.prod(shape)), cfg.vocab_size).reshape(shape)
+    return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=0,
+                    help="0 = DQN-driven adaptive frequency")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    NC, C = args.clusters, args.clients
+
+    opt = adam(3e-4)
+    init = core.build_init_fn(cfg, opt, mode=core.MODE_A, n_clusters=NC,
+                              clients_per_cluster=C)
+    state = init(key)
+
+    # digital twins of the simulated fleet + trust state
+    twins = core.sample_deviation(key, core.init_twins(key, NC * C))
+    rep = jnp.ones((NC, C))
+    queue = core.init_queue(budget=50.0, horizon=args.steps)
+
+    # DQN agent for adaptive frequency (pretrained quickly on the DT env)
+    agent = dcfg = None
+    if args.local_steps == 0:
+        dcfg = core.DQNConfig(buffer_size=256, batch_size=32)
+        agent = core.init_dqn(key, dcfg)
+
+    steps = {}
+    for a_i in range(1, 5):
+        steps[a_i] = jax.jit(core.build_train_step(
+            cfg, opt, mode=core.MODE_A, local_steps=a_i))
+
+    print("step,a_i,loss,queue,seconds")
+    for i in range(args.steps):
+        key, kb, ka, ke = jax.random.split(key, 4)
+        batch = make_fed_lm_batch(kb, cfg, NC, C, 1, args.batch, args.seq)
+        if agent is not None:
+            obs = jnp.pad(jnp.asarray(
+                [float(queue.q), i / args.steps, 0.0]), (0, envs.OBS_DIM - 3))
+            a_i = int(core.select_action(ka, agent, dcfg, obs)) % 4 + 1
+        else:
+            a_i = args.local_steps
+        stale = jnp.zeros((NC,))
+        t0 = time.time()
+        state, metrics = steps[a_i](state, batch, rep, stale)
+        loss = float(jnp.mean(metrics["loss"]))
+        # energy + queue + trust updates from the DT
+        e = float(jnp.mean(core.compute_energy(core.calibrated_freq(twins)))) * a_i
+        e += float(jnp.mean(core.comm_energy(
+            jnp.zeros(NC * C, jnp.int32), ke)))
+        queue = core.step_queue(queue, e)
+        div = metrics["divergence"].reshape(-1)
+        q = core.learning_quality(div[:, None])
+        b = core.belief(twins, q, pkt_fail=0.05)
+        rep = core.update_reputation(rep, b.reshape(NC, C), 0.05)
+        twins = core.calibrate(twins)
+        print(f"{i},{a_i},{loss:.4f},{float(queue.q):.3f},"
+              f"{time.time() - t0:.2f}")
+
+    if args.ckpt:
+        f = save_checkpoint(args.ckpt, args.steps, state.params)
+        print(f"saved,{f}")
+
+
+if __name__ == "__main__":
+    main()

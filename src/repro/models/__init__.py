@@ -1,0 +1,10 @@
+from .config import ArchConfig, ATTN, LOCAL, MAMBA, RGLRU
+from .transformer import (init_params, forward, prefill, decode_step,
+                          init_cache, param_specs, cache_specs)
+from .lm import lm_loss, weighted_lm_loss, xent
+
+__all__ = [
+    "ArchConfig", "ATTN", "LOCAL", "MAMBA", "RGLRU",
+    "init_params", "forward", "prefill", "decode_step", "init_cache",
+    "param_specs", "cache_specs", "lm_loss", "weighted_lm_loss", "xent",
+]

@@ -1,0 +1,373 @@
+"""Attention blocks: GQA/MQA/MHA (optional bias, qk-norm, logit softcap,
+sliding window) and DeepSeek-style MLA (multi-head latent attention).
+
+Two paths per block:
+  * ``*_forward``  — full-sequence causal attention (training / prefill),
+  * ``*_decode``   — one-token step against a (ring-buffer) KV cache.
+
+The KV cache for LOCAL (sliding-window) layers is a ring buffer of width
+``window``; stored absolute positions (init -1) drive validity masks, and RoPE
+is applied at write time with absolute positions, so relative offsets stay
+correct across wraparound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, LOCAL
+from .modules import apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
+
+NEG_INF = -2.0e38
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_attn(key, cfg: ArchConfig, dtype=jnp.float32):
+    if cfg.use_mla:
+        return _init_mla(key, cfg, dtype)
+    ks = jax.random.split(key, 6)
+    hd = cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = init_rmsnorm(hd)
+        p["knorm"] = init_rmsnorm(hd)
+    return p
+
+
+def _init_mla(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 6)
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype=dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora_rank)
+        p["wq_b"] = dense_init(ks[1], (cfg.q_lora_rank, cfg.num_heads * qk), dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[0], (cfg.d_model, cfg.num_heads * qk), dtype=dtype)
+    p["wkv_a"] = dense_init(
+        ks[2], (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype=dtype)
+    p["kv_norm"] = init_rmsnorm(cfg.kv_lora_rank)
+    p["wkv_b"] = dense_init(
+        ks[3], (cfg.kv_lora_rank,
+                cfg.num_heads * (cfg.qk_nope_dim + cfg.v_head_dim)), dtype=dtype)
+    p["wo"] = dense_init(
+        ks[4], (cfg.num_heads * cfg.v_head_dim, cfg.d_model), dtype=dtype)
+    return p
+
+
+# --------------------------------------------------------------------- #
+# core sdpa with grouped heads
+# --------------------------------------------------------------------- #
+def _sdpa(q, k, v, mask, scale, cap):
+    """q: (B,S,H,dq) k: (B,T,Kv,dq) v: (B,T,Kv,dv); mask: (B,1,1,S,T)|None."""
+    B, S, H, dq = q.shape
+    Kv = k.shape[2]
+    g = H // Kv
+    q = q.reshape(B, S, Kv, g, dq)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def causal_mask(S, T, offset=0, window=0):
+    """(S,T) bool; query i attends key j iff j <= i+offset (and within
+    window for sliding attention)."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa_chunked(q, k, v, scale, cap, window, chunk):
+    """Query-chunked causal attention (lax.map over Q blocks) — keeps the
+    scores working set at (B,Kv,g,chunk,T) instead of (B,Kv,g,S,S); this is
+    what makes prefill_32k lower within HBM (DESIGN.md §6, and the jnp
+    analogue of kernels/flash_attention.py)."""
+    B, S, H, dq = q.shape
+    T = k.shape[1]
+    nq = S // chunk
+    assert nq * chunk == S, (S, chunk)
+    qc = q.reshape(B, nq, chunk, H, dq).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(args):
+        # inner remat: without it, lax.map's VJP streams the f32 score and
+        # softmax tensors of every chunk to HBM as residuals — recomputing
+        # them from (q,k,v) is cheaper than the traffic (§Perf pair 3)
+        i, qb = args
+        mask = causal_mask(chunk, T, offset=i * chunk, window=window)
+        return _sdpa(qb, k, v, mask[None, None, None], scale, cap)
+
+    outs = jax.lax.map(body, (jnp.arange(nq), qc))      # (nq,B,chunk,H,dv)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, -1)
+
+
+# --------------------------------------------------------------------- #
+# GQA forward / decode
+# --------------------------------------------------------------------- #
+def _project_qkv(p, cfg, x):
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q, k = rmsnorm(p["qnorm"], q), rmsnorm(p["knorm"], k)
+    return q, k, v
+
+
+def _ring_cache(k, v, pos, Wc, dtype):
+    """Pack the last Wc (roped) keys/values into ring-buffer slot order so
+    decode can continue: slot = position % Wc."""
+    B, S = k.shape[:2]
+    take = min(S, Wc)
+    tail_pos = jnp.arange(S - take, S)
+    slots = tail_pos % Wc
+    ck = jnp.zeros((B, Wc) + k.shape[2:], dtype).at[:, slots].set(
+        k[:, S - take:].astype(dtype))
+    cv = jnp.zeros((B, Wc) + v.shape[2:], dtype).at[:, slots].set(
+        v[:, S - take:].astype(dtype))
+    cpos = jnp.full((Wc,), -1, jnp.int32).at[slots].set(tail_pos)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def attn_forward(p, cfg: ArchConfig, x, kind: str, q_chunk: int = 0,
+                 return_cache: bool = False, cache_len: int = 0,
+                 cache_dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = jnp.arange(S)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    window = cfg.window if kind == LOCAL else 0
+    scale = cfg.head_dim ** -0.5
+    if q_chunk and S > q_chunk:
+        out = _sdpa_chunked(q, k, v, scale, cfg.attn_softcap, window, q_chunk)
+    else:
+        mask = causal_mask(S, S, window=window)[None, None, None]
+        out = _sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    if not return_cache:
+        return y
+    Wc = min(cache_len, cfg.window) if (kind == LOCAL and cfg.window) else cache_len
+    return y, _ring_cache(k, v, pos, Wc, cache_dtype)
+
+
+def init_attn_cache(cfg: ArchConfig, batch, max_len, kind, dtype=jnp.bfloat16):
+    Wc = min(max_len, cfg.window) if kind == LOCAL else max_len
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((batch, Wc, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, Wc, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((Wc,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, Wc, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, Wc, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((Wc,), -1, jnp.int32),
+    }
+
+
+def _decode_replicate_heads(cfg: ArchConfig, *tensors):
+    """When the head counts don't divide the model axis (gemma-2b H=8,
+    qwen kv=40, grok/granite/chameleon kv=8), GSPMD pads the head shard and
+    falls back to all-gathering the f32-converted KV cache across `model`
+    (measured 12 GB/token on gemma-2b decode).  Pinning the small decode
+    q/k/v to batch-only sharding makes XLA gather the ~16 KB query instead
+    of the multi-GB cache."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if (mesh is None or not mesh.axis_names
+                or "model" not in mesh.axis_names
+                or "data" not in mesh.axis_names):
+            return tensors
+        tp = mesh.shape["model"]
+        if cfg.num_heads % tp == 0 and cfg.num_kv_heads % tp == 0:
+            return tensors
+        from jax.sharding import PartitionSpec
+        out = tuple(
+            jax.lax.with_sharding_constraint(
+                t, PartitionSpec(*(["data"] + [None] * (t.ndim - 1))))
+            for t in tensors)
+        return out
+    except Exception:
+        return tensors
+
+
+def attn_decode(p, cfg: ArchConfig, x, cache, step, kind: str):
+    """x: (B,1,D); step: scalar int32 absolute position. Returns (y, cache)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k, v = _decode_replicate_heads(cfg, q, k, v)
+    q = apply_rope(q, step[None], cfg.rope_theta)
+    k = apply_rope(k, step[None], cfg.rope_theta)
+    Wc = cache["k"].shape[1]
+    slot = step % Wc
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+    cpos = cache["pos"].at[slot].set(step)
+    window = cfg.window if kind == LOCAL else 0
+    valid = (cpos >= 0) & (cpos <= step)
+    if window > 0:
+        valid &= cpos > step - window
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, ck, cv, mask, cfg.head_dim ** -0.5, cfg.attn_softcap)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# --------------------------------------------------------------------- #
+# MLA forward / decode
+# --------------------------------------------------------------------- #
+def _mla_q(p, cfg, x):
+    B, S = x.shape[:2]
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = rmsnorm(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, cfg.num_heads, qk)
+    return jnp.split(q, [cfg.qk_nope_dim], axis=-1)  # q_nope, q_rope
+
+
+def mla_forward(p, cfg: ArchConfig, x, kind: str, q_chunk: int = 0,
+                return_cache: bool = False, cache_len: int = 0,
+                cache_dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)  # (B,S,1,r)
+    kv = (c_kv @ p["wkv_b"]).reshape(
+        B, S, cfg.num_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.num_heads, cfg.qk_rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    if q_chunk and S > q_chunk:
+        out = _sdpa_chunked(q, k, v, scale, cfg.attn_softcap, 0, q_chunk)
+    else:
+        mask = causal_mask(S, S)[None, None, None]
+        out = _sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    if not return_cache:
+        return y
+    Wc = cache_len
+    take = min(S, Wc)
+    tail = jnp.arange(S - take, S)
+    slots = tail % Wc
+    cc = jnp.zeros((B, Wc, cfg.kv_lora_rank), cache_dtype).at[:, slots].set(
+        c_kv[:, S - take:].astype(cache_dtype))
+    cr = jnp.zeros((B, Wc, cfg.qk_rope_dim), cache_dtype).at[:, slots].set(
+        k_rope[:, S - take:, 0].astype(cache_dtype))
+    cpos = jnp.full((Wc,), -1, jnp.int32).at[slots].set(tail)
+    return y, {"ckv": cc, "krope": cr, "pos": cpos}
+
+
+def mla_decode_absorbed(p, cfg: ArchConfig, x, cache, step, kind: str):
+    """Absorbed-matrix MLA decode (beyond-paper §Perf optimization).
+
+    Instead of re-expanding K/V for every cached position
+    (S·r·H·(nope+v) FLOPs/token — the naive path's MF/HLO was 0.001),
+    fold W_UK into the query and W_UV into the output:
+        scores_h = (q_nope_h W_UK_h^T) · c  +  q_rope_h · k_rope
+        out_h    = (sum_t w_t c_t) W_UV_h
+    Attention then runs directly in the latent space: H·S·r FLOPs/token.
+    """
+    B = x.shape[0]
+    H, r = cfg.num_heads, cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x)                   # (B,1,H,*)
+    q_rope = apply_rope(q_rope, step[None], cfg.rope_theta)
+    ckv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], step[None], cfg.rope_theta)[:, :, 0]
+    Wc = cache["ckv"].shape[1]
+    slot = step % Wc
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), slot, 1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], k_rope.astype(cache["krope"].dtype), slot, 1)
+    cpos = cache["pos"].at[slot].set(step)
+
+    # absorb: W_UK (r, H, nope), W_UV (r, H, v)
+    wkv_b = p["wkv_b"].reshape(r, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk, w_uv = jnp.split(wkv_b, [cfg.qk_nope_dim], axis=-1)
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)   # (B,H,r)
+
+    c = cc.astype(x.dtype)                                   # (B,Wc,r)
+    s_lat = jnp.einsum("bhr,btr->bht", q_eff, c)
+    s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0], cr.astype(x.dtype))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    s = softcap(s, cfg.attn_softcap)
+    valid = (cpos >= 0) & (cpos <= step)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)           # (B,H,Wc)
+    ctx = jnp.einsum("bht,btr->bhr", w, c)                   # (B,H,r)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)              # (B,H,v)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": cc, "krope": cr, "pos": cpos}
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache, step, kind: str):
+    """Latent-cache decode (naive expansion of K/V from c_kv per step —
+    kept as the reference; serving uses mla_decode_absorbed when
+    cfg.mla_absorbed, see EXPERIMENTS.md §Perf)."""
+    if cfg.mla_absorbed:
+        return mla_decode_absorbed(p, cfg, x, cache, step, kind)
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    q_rope = apply_rope(q_rope, step[None], cfg.rope_theta)
+    ckv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], step[None], cfg.rope_theta)[:, :, 0]
+    Wc = cache["ckv"].shape[1]
+    slot = step % Wc
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), slot, 1)
+    cr = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], k_rope.astype(cache["krope"].dtype), slot, 1)
+    cpos = cache["pos"].at[slot].set(step)
+    # expand K/V for all cached latents
+    kv = (cc.astype(x.dtype) @ p["wkv_b"]).reshape(
+        B, Wc, cfg.num_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(cr.astype(x.dtype)[:, :, None, :],
+                          (B, Wc, cfg.num_heads, cfg.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    valid = (cpos >= 0) & (cpos <= step)
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, k, v, mask, scale, cfg.attn_softcap)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": cc, "krope": cr, "pos": cpos}

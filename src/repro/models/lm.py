@@ -1,0 +1,51 @@
+"""Language-model losses over the transformer substrate."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .transformer import forward
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def xent(logits, labels):
+    """Mean token cross-entropy. logits (..., V), labels (...)."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(params, cfg: ArchConfig, batch, remat: bool = True,
+            q_chunk: int = 0):
+    """batch = {"tokens": (B,S)|(B,K,S), "labels": same} -> scalar loss."""
+    logits, aux = forward(params, cfg, batch["tokens"], remat=remat,
+                          q_chunk=q_chunk)
+    loss = xent(logits, batch["labels"])
+    if cfg.num_experts:
+        loss = loss + MOE_AUX_WEIGHT * aux
+    return loss
+
+
+def weighted_lm_loss(params, cfg: ArchConfig, batch, example_weights,
+                     remat: bool = True, q_chunk: int = 0):
+    """Trust-weighted loss (FL mode B): per-example weights make the implicit
+    gradient all-reduce the trust-weighted aggregation (DESIGN.md §2).
+
+    example_weights: (B,) normalized trust weights of each example's client.
+    """
+    logits, aux = forward(params, cfg, batch["tokens"], remat=remat,
+                          q_chunk=q_chunk)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), batch["labels"][..., None], axis=-1)[..., 0]
+    per_tok = logz - gold                       # (B,S) or (B,K,S)
+    w = example_weights
+    while w.ndim < per_tok.ndim:
+        w = w[..., None]
+    loss = jnp.sum(per_tok * w) / (jnp.sum(jnp.broadcast_to(w, per_tok.shape)) + 1e-9)
+    if cfg.num_experts:
+        loss = loss + MOE_AUX_WEIGHT * aux
+    return loss

@@ -1,0 +1,119 @@
+"""Mamba-1 selective state-space block (falcon-mamba-7b).
+
+Forward uses a jnp `lax.scan` over the sequence (the Pallas `selective_scan`
+kernel in kernels/ is the TPU hot-path realization, validated against
+kernels/ref.py); decode is a single recurrence step with an O(1) state:
+(B, d_inner, N) SSM state + (B, conv_k-1, d_inner) conv ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .modules import dense_init
+
+# §Perf pair-1 iteration: unrolling the selective-scan body lets XLA fuse
+# consecutive recurrence steps, keeping h and the dA/dBx temporaries out of
+# HBM between steps (measured: 4630s -> see EXPERIMENTS.md).  The Pallas
+# selective_scan kernel is the full fix on TPU (state resident in VMEM).
+SEQ_UNROLL = 64
+
+
+def init_mamba(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    D, Di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (K, Di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "x_proj": dense_init(ks[2], (Di, R + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (R, Di), dtype=dtype),
+        "dt_bias": jnp.zeros((Di,), jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (Di, D), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,Di), w: (K,Di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_params(p, cfg, xc):
+    """xc: (..., Di) conv output -> (dt, B, C) selective params.
+    dt streams through the seq scan: keep it in the activation dtype
+    (fp32 dt doubled the dominant HBM stream — §Perf pair 1, iter 5)."""
+    dbc = xc @ p["x_proj"]
+    dt_r, Bc, Cc = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"]).astype(xc.dtype)
+    return dt, Bc, Cc
+
+
+def mamba_forward(p, cfg: ArchConfig, x, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) [, decode cache]."""
+    B, S, D = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dt, Bc, Cc = _ssm_params(p, cfg, xc)                  # (B,S,Di) (B,S,N) (B,S,N)
+    A = -jnp.exp(p["A_log"])                              # (Di,N)
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp                        # (B,Di) (B,Di) (B,N) (B,N)
+        dA = jnp.exp(dt_t[..., None] * A)                 # (B,Di,N)
+        dBx = (dt_t * xc_t)[..., None] * B_t[:, None, :]  # (B,Di,N)
+        h = dA * h.astype(jnp.float32) + dBx.astype(jnp.float32)
+        # elementwise-mul + reduce instead of einsum: a dot is a fusion
+        # barrier that forces h to HBM every step (§Perf pair 1, iter 2);
+        # N=16 is far below MXU utility anyway
+        y = (h * C_t[:, None, :].astype(jnp.float32)).sum(-1)
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs,
+                              unroll=min(SEQ_UNROLL, S))
+    y = ys.swapaxes(0, 1) + xc * p["D"].astype(x.dtype)
+    y = (y * jax.nn.silu(z)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    conv_tail = xin[:, max(0, S - (K - 1)):, :]
+    if S < K - 1:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def init_mamba_cache(cfg: ArchConfig, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x, cache, step):
+    """x: (B,1,D) one-token step."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (B,Di)
+    hist = jnp.concatenate([cache["conv"], xin[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]                                       # (K,Di)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist.astype(x.dtype), w) + p["conv_b"])
+    dt, Bc, Cc = _ssm_params(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBx = (dt * xc)[..., None] * Bc[:, None, :]
+    h = dA * cache["h"] + dBx.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = ((y + xc * p["D"].astype(x.dtype)) * jax.nn.silu(z)).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,96 @@
+"""Griffin RG-LRU recurrent block (recurrentgemma-2b).
+
+Block: x -> [W_x -> causal conv -> RG-LRU] * gelu(W_gate x) -> W_out.
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(x W_a + b_a)            recurrence gate
+    i_t = sigmoid(x W_i + b_i)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Forward is a lax.scan; kernels/rglru_scan.py is the TPU hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .modules import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    D, W, K = cfg.d_model, cfg.lru_width, cfg.ssm_conv
+    return {
+        "w_x": dense_init(ks[0], (D, W), dtype=dtype),
+        "w_gate": dense_init(ks[1], (D, W), dtype=dtype),
+        "conv_w": dense_init(ks[2], (K, W), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": dense_init(ks[3], (W, W), dtype=dtype),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": dense_init(ks[4], (W, W), dtype=dtype),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.linspace(0.9, 5.0, W),          # softplus(lam) spans decay rates
+        "w_out": dense_init(ks[5], (W, D), dtype=dtype),
+    }
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid((xc @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((xc @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i
+
+
+from .mamba import _causal_conv  # shared depthwise causal conv
+
+
+def rglru_forward(p, cfg: ArchConfig, x, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) [, decode cache]."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xin = x @ p["w_x"]
+    xr = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    a, bi = _gates(p, xr)                                  # (B,S,W) fp32
+
+    def step(h, inp):
+        a_t, bix_t = inp
+        h = a_t * h + bix_t
+        return h, h
+
+    xs = (a.swapaxes(0, 1), (bi * xr.astype(jnp.float32)).swapaxes(0, 1))
+    h0 = jnp.zeros((B, cfg.lru_width), jnp.float32)
+    from .mamba import SEQ_UNROLL
+    h_last, hs = jax.lax.scan(step, h0, xs, unroll=min(SEQ_UNROLL, S))
+    y = hs.swapaxes(0, 1).astype(x.dtype) * gate
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    K = cfg.ssm_conv
+    conv_tail = xin[:, max(0, S - (K - 1)):, :]
+    if S < K - 1:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def init_rglru_cache(cfg: ArchConfig, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode(p, cfg: ArchConfig, x, cache, step):
+    """x: (B,1,D) one-token step."""
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"])
+    xin = x[:, 0] @ p["w_x"]
+    hist = jnp.concatenate(
+        [cache["conv"], xin[:, None].astype(cache["conv"].dtype)], axis=1)
+    xr = jnp.einsum("bkw,kw->bw", hist.astype(x.dtype), p["conv_w"]) + p["conv_b"]
+    a, bi = _gates(p, xr)
+    h = a * cache["h"] + bi * xr.astype(jnp.float32)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y[:, None], {"h": h, "conv": hist[:, 1:]}

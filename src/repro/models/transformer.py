@@ -1,0 +1,537 @@
+"""Decoder-only transformer substrate.
+
+Supports every assigned architecture family through ``ArchConfig``:
+dense / GQA / MQA / MLA attention, sliding-window attention, MoE MLPs,
+Mamba-1 SSM blocks, RG-LRU recurrent blocks, multi-codebook audio heads.
+
+Layer organization (keeps HLO small and compile fast on 64-layer configs):
+    prefix   — ``first_dense_layers`` unrolled layers (deepseek dense layer 0)
+    groups   — ``lax.scan`` over G repeats of ``block_pattern`` (remat'ed)
+    suffix   — remainder layers (depth % pattern) unrolled
+
+Params / caches are dict pytrees; ``param_specs`` mirrors the structure with
+PartitionSpecs by leaf name (see DESIGN.md §5 for the sharding plan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ATTN, LOCAL, MAMBA, RGLRU, ArchConfig
+from .attention import (attn_decode, attn_forward, init_attn, init_attn_cache,
+                        mla_decode, mla_forward)
+from .mamba import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+from .modules import init_mlp, init_rmsnorm, mlp, rmsnorm
+from .moe import init_moe, moe_forward
+from .rglru import init_rglru, init_rglru_cache, rglru_decode, rglru_forward
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _init_layer(key, cfg: ArchConfig, kind: str, layer_idx: int, dtype):
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model)}
+    if kind in (ATTN, LOCAL):
+        p["attn"] = init_attn(ks[0], cfg, dtype)
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        if cfg.num_experts and layer_idx >= cfg.first_dense_layers:
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == MAMBA:
+        p["mamba"] = init_mamba(ks[0], cfg, dtype)
+    elif kind == RGLRU:
+        p["rglru"] = init_rglru(ks[0], cfg, dtype)
+        p["ln2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _split_depth(cfg: ArchConfig):
+    """-> (prefix_idx, group_count, suffix_idx) over layer indices."""
+    pat = len(cfg.block_pattern)
+    pre = cfg.first_dense_layers
+    rest = cfg.num_layers - pre
+    groups = rest // pat
+    suf_start = pre + groups * pat
+    return list(range(pre)), groups, list(range(suf_start, cfg.num_layers))
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    pre_idx, groups, suf_idx = _split_depth(cfg)
+    kinds = cfg.layer_kinds()
+    k_emb, k_body, k_head = jax.random.split(key, 3)
+
+    params: Dict[str, Any] = {}
+    eshape = (cfg.padded_vocab, cfg.d_model)
+    if cfg.num_codebooks > 1:
+        eshape = (cfg.num_codebooks,) + eshape
+    params["embed"] = 0.02 * jax.random.normal(k_emb, eshape, dtype)
+
+    layer_keys = jax.random.split(k_body, cfg.num_layers)
+    params["prefix"] = [
+        _init_layer(layer_keys[i], cfg, kinds[i], i, dtype) for i in pre_idx]
+
+    pat = cfg.block_pattern
+    if groups:
+        stacked = []
+        for j in range(len(pat)):
+            per = [_init_layer(layer_keys[len(pre_idx) + g * len(pat) + j],
+                               cfg, pat[j], len(pre_idx) + g * len(pat) + j,
+                               dtype)
+                   for g in range(groups)]
+            stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        params["groups"] = stacked
+    else:
+        params["groups"] = []
+
+    params["suffix"] = [
+        _init_layer(layer_keys[i], cfg, kinds[i], i, dtype) for i in suf_idx]
+
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        hshape = (cfg.d_model, cfg.padded_vocab)
+        if cfg.num_codebooks > 1:
+            hshape = (cfg.num_codebooks,) + hshape
+        params["lm_head"] = 0.02 * jax.random.normal(k_head, hshape, dtype)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# forward (training / prefill)
+# --------------------------------------------------------------------- #
+def _apply_layer(lp, cfg: ArchConfig, kind: str, x, is_moe: bool,
+                 q_chunk: int = 0, cache_len: int = 0):
+    """One residual layer.  cache_len > 0 => prefill mode: also return the
+    decode cache (ring-buffer KV / recurrent state)."""
+    aux = jnp.zeros((), jnp.float32)
+    lcache = None
+    h = rmsnorm(lp["ln1"], x)
+    if kind in (ATTN, LOCAL):
+        fwd = mla_forward if cfg.use_mla else attn_forward
+        if cache_len:
+            y, lcache = fwd(lp["attn"], cfg, h, kind, q_chunk=q_chunk,
+                            return_cache=True, cache_len=cache_len)
+        else:
+            y = fwd(lp["attn"], cfg, h, kind, q_chunk=q_chunk)
+        x = x + y
+        h2 = rmsnorm(lp["ln2"], x)
+        if is_moe:
+            y, aux = moe_forward(lp["moe"], cfg, h2)
+        else:
+            y = mlp(lp["mlp"], h2, cfg.activation)
+        x = x + y
+    elif kind == MAMBA:
+        if cache_len:
+            y, lcache = mamba_forward(lp["mamba"], cfg, h, return_state=True)
+        else:
+            y = mamba_forward(lp["mamba"], cfg, h)
+        x = x + y
+    elif kind == RGLRU:
+        if cache_len:
+            y, lcache = rglru_forward(lp["rglru"], cfg, h, return_state=True)
+        else:
+            y = rglru_forward(lp["rglru"], cfg, h)
+        x = x + y
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.activation)
+    if cache_len:
+        return x, aux, lcache
+    return x, aux
+
+
+def embed_tokens(params, cfg: ArchConfig, tokens):
+    """tokens: (B,S) int32 or (B,K,S) for multi-codebook audio."""
+    if cfg.num_codebooks > 1:
+        # sum codebook embeddings: embed (K,V,D), tokens (B,K,S)
+        embs = jnp.take_along_axis(
+            params["embed"][None],                     # (1,K,V,D)
+            tokens.transpose(0, 1, 2)[..., None],      # (B,K,S,1)
+            axis=2)
+        x = embs.sum(axis=1)                           # (B,S,D)
+    else:
+        x = params["embed"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        head = params["embed"]
+        if cfg.num_codebooks > 1:
+            logits = jnp.einsum("bsd,kvd->bksv", x, head)
+        else:
+            logits = x @ head.T
+    else:
+        head = params["lm_head"]
+        if cfg.num_codebooks > 1:
+            logits = jnp.einsum("bsd,kdv->bksv", x, head)
+        else:
+            logits = x @ head
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad-vocab logits (elementwise; no resharding of the vocab dim)
+        vocab_ids = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(vocab_ids < cfg.vocab_size, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return logits
+
+
+def forward(params, cfg: ArchConfig, tokens, remat: bool = True,
+            q_chunk: int = 0):
+    """-> (logits, moe_aux).  logits (B,S,V) or (B,K,S,V) for audio."""
+    kinds = cfg.layer_kinds()
+    pre_idx, groups, suf_idx = _split_depth(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, lp in zip(pre_idx, params["prefix"]):
+        x, a = _apply_layer(lp, cfg, kinds[i], x,
+                            is_moe=bool(cfg.num_experts) and i >= cfg.first_dense_layers,
+                            q_chunk=q_chunk)
+        aux = aux + a
+
+    if groups:
+        pat = cfg.block_pattern
+        moe_flags = [bool(cfg.num_experts) and (len(pre_idx) + j) >= cfg.first_dense_layers
+                     for j in range(len(pat))]
+
+        def group_body(carry, gp):
+            x, aux = carry
+            for j, kind in enumerate(pat):
+                x, a = _apply_layer(gp[j], cfg, kind, x, moe_flags[j],
+                                    q_chunk=q_chunk)
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        if cfg.unroll_layers:
+            for g in range(groups):
+                gp = jax.tree.map(lambda a: a[g], tuple(params["groups"]))
+                (x, aux), _ = body((x, aux), gp)
+        elif cfg.scan_indexed:
+            stacked = tuple(params["groups"])
+
+            def idx_body(carry, g):
+                gp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, g, 0, keepdims=False), stacked)
+                return body(carry, gp)
+
+            (x, aux), _ = jax.lax.scan(idx_body, (x, aux),
+                                       jnp.arange(groups))
+        else:
+            (x, aux), _ = jax.lax.scan(body, (x, aux),
+                                       tuple(params["groups"]))
+
+    for i, lp in zip(suf_idx, params["suffix"]):
+        x, a = _apply_layer(lp, cfg, kinds[i], x,
+                            is_moe=bool(cfg.num_experts) and i >= cfg.first_dense_layers,
+                            q_chunk=q_chunk)
+        aux = aux + a
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params, cfg, x)
+    if cfg.num_codebooks > 1:
+        logits = logits.transpose(0, 1, 2, 3)  # (B,K,S,V)
+    return logits, aux
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache_len: int,
+            q_chunk: int = 1024):
+    """Serving prefill: run the full prompt, return last-position logits and
+    a decode-ready cache (ring-buffer KV / recurrent states).
+
+    tokens: (B,S) or (B,K,S).  -> (logits (B,V)|(B,K,V), cache)."""
+    kinds = cfg.layer_kinds()
+    pre_idx, groups, suf_idx = _split_depth(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    cache = {"prefix": [], "groups": [], "suffix": []}
+
+    def moe_flag(i):
+        return bool(cfg.num_experts) and i >= cfg.first_dense_layers
+
+    for i, lp in zip(pre_idx, params["prefix"]):
+        x, _, lc = _apply_layer(lp, cfg, kinds[i], x, moe_flag(i),
+                                q_chunk=q_chunk, cache_len=cache_len)
+        cache["prefix"].append(lc)
+
+    if groups:
+        pat = cfg.block_pattern
+
+        def group_body(carry, gp):
+            x, = carry
+            lcs = []
+            for j, kind in enumerate(pat):
+                x, _, lc = _apply_layer(gp[j], cfg, kind, x,
+                                        moe_flag(len(pre_idx) + j),
+                                        q_chunk=q_chunk, cache_len=cache_len)
+                lcs.append(lc)
+            return (x,), tuple(lcs)
+
+        (x,), gcaches = jax.lax.scan(group_body, (x,),
+                                     tuple(params["groups"]))
+        cache["groups"] = list(gcaches)
+
+    for i, lp in zip(suf_idx, params["suffix"]):
+        x, _, lc = _apply_layer(lp, cfg, kinds[i], x, moe_flag(i),
+                                q_chunk=q_chunk, cache_len=cache_len)
+        cache["suffix"].append(lc)
+
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = unembed(params, cfg, x)
+    if cfg.num_codebooks > 1:
+        return logits[:, :, 0], cache
+    return logits[:, 0], cache
+
+
+# --------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------- #
+def _init_layer_cache(cfg: ArchConfig, kind, batch, max_len, dtype):
+    if kind in (ATTN, LOCAL):
+        return init_attn_cache(cfg, batch, max_len, kind, dtype)
+    if kind == MAMBA:
+        return init_mamba_cache(cfg, batch)
+    if kind == RGLRU:
+        return init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    pre_idx, groups, suf_idx = _split_depth(cfg)
+    kinds = cfg.layer_kinds()
+    cache: Dict[str, Any] = {
+        "prefix": [_init_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+                   for i in pre_idx],
+        "suffix": [_init_layer_cache(cfg, kinds[i], batch, max_len, dtype)
+                   for i in suf_idx],
+        "groups": [],
+    }
+    if groups:
+        for j, kind in enumerate(cfg.block_pattern):
+            one = _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            cache["groups"].append(
+                jax.tree.map(lambda x: jnp.broadcast_to(x, (groups,) + x.shape), one))
+    return cache
+
+
+def _decode_layer(lp, cfg, kind, x, lcache, step):
+    h = rmsnorm(lp["ln1"], x)
+    if kind in (ATTN, LOCAL):
+        dec = mla_decode if cfg.use_mla else attn_decode
+        y, lcache = dec(lp["attn"], cfg, h, lcache, step, kind)
+        x = x + y
+        h2 = rmsnorm(lp["ln2"], x)
+        if "moe" in lp:
+            y2, _ = moe_forward(lp["moe"], cfg, h2)
+        else:
+            y2 = mlp(lp["mlp"], h2, cfg.activation)
+        x = x + y2
+    elif kind == MAMBA:
+        y, lcache = mamba_decode(lp["mamba"], cfg, h, lcache, step)
+        x = x + y
+    elif kind == RGLRU:
+        y, lcache = rglru_decode(lp["rglru"], cfg, h, lcache, step)
+        x = x + y
+        x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x), cfg.activation)
+    return x, lcache
+
+
+def decode_step(params, cache, cfg: ArchConfig, tokens, step):
+    """One-token decode.  tokens: (B,) or (B,K) audio; step: scalar int32
+    absolute position.  Returns (logits (B,V)|(B,K,V), new_cache)."""
+    kinds = cfg.layer_kinds()
+    pre_idx, groups, suf_idx = _split_depth(cfg)
+    tok = tokens[:, None] if cfg.num_codebooks == 1 else tokens[..., None]
+    x = embed_tokens(params, cfg, tok)                 # (B,1,D)
+    new_cache = {"prefix": [], "groups": [], "suffix": []}
+
+    for i, lp, lc in zip(pre_idx, params["prefix"], cache["prefix"]):
+        x, lc = _decode_layer(lp, cfg, kinds[i], x, lc, step)
+        new_cache["prefix"].append(lc)
+
+    if groups:
+        pat = cfg.block_pattern
+
+        def group_body(carry, xs):
+            x, = carry
+            gp, gc = xs
+            ncs = []
+            for j, kind in enumerate(pat):
+                x, nc = _decode_layer(gp[j], cfg, kind, x, gc[j], step)
+                ncs.append(nc)
+            return (x,), tuple(ncs)
+
+        (x,), gcaches = jax.lax.scan(
+            group_body, (x,), (tuple(params["groups"]), tuple(cache["groups"])))
+        new_cache["groups"] = list(gcaches)
+
+    for i, lp, lc in zip(suf_idx, params["suffix"], cache["suffix"]):
+        x, lc = _decode_layer(lp, cfg, kinds[i], x, lc, step)
+        new_cache["suffix"].append(lc)
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params, cfg, x)
+    if cfg.num_codebooks > 1:
+        return logits[:, :, 0], new_cache                # (B,K,V)
+    return logits[:, 0], new_cache                       # (B,V)
+
+
+# --------------------------------------------------------------------- #
+# sharding specs
+# --------------------------------------------------------------------- #
+_COL = {"wq", "wk", "wv", "wg", "wu", "in_proj", "w_x", "w_gate"}       # (D, out*tp)
+_ROW = {"wo", "wd", "out_proj", "w_out"}                                # (in*tp, D)
+_VEC_TP = {"bq", "bk", "bv", "conv_b", "b_a", "b_i", "dt_bias", "D", "lam"}
+_REPL = {"ln1", "ln2", "final_norm", "qnorm", "knorm", "q_norm", "kv_norm",
+         "A_log_unused"}
+
+
+def _base_spec(path, name, audio, tp, fsdp, ep, shard_experts):
+    """Sharding rules (DESIGN.md §5, EXPERIMENTS.md §Perf for measured
+    comparisons).
+
+    tp   — tensor-parallel axis: heads / d_ff / vocab ('model')
+    fsdp — contracting-dim (ZeRO-style) axis for dense weights; used by
+           grok's fsdp_tp scheme with unrolled layers (per-layer gathers)
+    ep   — expert-parallel axis for MoE expert weights (deepseek's ep_tp)
+    """
+    # shared-expert MLPs under moe/shared are plain 2-D mlps, not (E,.,.)
+    in_moe = any(getattr(k, "key", None) == "moe" for k in path) and \
+        not any(getattr(k, "key", None) == "shared" for k in path)
+    if name == "embed":
+        base = (None, tp, fsdp) if audio else (tp, fsdp)
+    elif name == "lm_head":
+        base = (None, fsdp, tp) if audio else (fsdp, tp)
+    elif in_moe and name in ("wg", "wu"):
+        if ep and shard_experts:
+            base = (ep, None, tp)
+        elif ep:                      # E not divisible by ep: split d_ff 2-D
+            base = (None, None, (ep, tp))
+        elif fsdp:
+            base = (None, fsdp, tp)
+        else:
+            base = (tp, None, None) if shard_experts else (None, None, tp)
+    elif in_moe and name == "wd":
+        if ep and shard_experts:
+            # (ep, None, tp): contract d_ff locally, shard the output D —
+            # swaps the per-layer f32 all-reduce of (E,cap,D) partials for
+            # a smaller bf16 all-gather (§Perf pair 2, iter 1)
+            base = (ep, None, tp)
+        elif ep:
+            base = (None, (ep, tp), None)
+        elif fsdp:
+            base = (None, tp, fsdp)
+        else:
+            base = (tp, None, None) if shard_experts else (None, tp, None)
+    elif name == "router":
+        base = (None, None)
+    elif name in _COL:
+        base = (fsdp, tp)
+    elif name in _ROW:
+        base = (tp, fsdp)
+    elif name in ("wq_a", "wkv_a"):
+        base = (fsdp, None)
+    elif name in ("wq_b", "wkv_b", "dt_proj", "w_a", "w_i"):
+        base = (None, tp)
+    elif name in ("x_proj", "A_log"):
+        base = (tp, None)
+    elif name == "conv_w":
+        base = (None, tp)
+    elif name in _VEC_TP:
+        base = (tp,)
+    else:
+        base = (None,)
+    return base
+
+
+def param_specs(params, cfg: ArchConfig, *, tp="model", fsdp=None,
+                stack_axis=None, leading=(), tp_size=16, ep_size=16):
+    """PartitionSpec tree mirroring ``params``.
+
+    tp      — mesh axis for tensor parallelism (heads / d_ff / vocab)
+    fsdp    — expert-parallel mesh axis for MoE weights (mode B: 'data')
+    stack_axis — shard the layer-stack dim of scanned group params (weight
+              streaming: per-layer gathers are loop-VARIANT so XLA cannot
+              hoist them into a full-size buffer — grok's scheme)
+    leading — mesh axes stamped on the first len(leading) leaf dims; FL mode A
+              uses ('pod','data') for (cluster, client) dims, mode B ('pod',)
+    """
+    ep = fsdp if cfg.shard_scheme == "ep_tp" else None
+    dense_fsdp = fsdp if cfg.shard_scheme == "fsdp_tp" else None
+    shard_experts = bool(cfg.num_experts) and (
+        (ep and ep_size and cfg.num_experts % ep_size == 0)
+        or (not ep and not dense_fsdp and tp_size
+            and cfg.num_experts % tp_size == 0))
+
+    def spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        base = list(_base_spec(path, name, cfg.num_codebooks > 1, tp,
+                               dense_fsdp, ep, shard_experts))
+        while len(base) < leaf.ndim:
+            base.insert(0, None)
+        base = base[:leaf.ndim]
+        if stack_axis and path and getattr(path[0], "key", None) == "groups":
+            g = len(leading)
+            if g < leaf.ndim and base[g] is None:
+                base[g] = stack_axis
+        for i, ax in enumerate(leading):
+            if i < leaf.ndim and base[i] is None:
+                base[i] = ax
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cache_specs(cache, *, batch_axis="data", kv_axis=None, seq_axis=None,
+                state_axis=None, attn_seq_axis=None):
+    """Sharding specs for decode caches.
+
+    batch_axis    — cache batch dim (None for long_500k's batch=1)
+    kv_axis       — KV-head dim of attention caches (when divisible)
+    seq_axis      — sequence dim of MLA latent caches (context parallelism)
+    state_axis    — channel dim of SSM/LRU states ('model')
+    attn_seq_axis — sequence dim of attention K/V caches when the KV-head
+                    count does not divide the model axis (qwen kv=40,
+                    grok/granite/chameleon kv=8): context parallelism
+    """
+    def spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        stacked = bool(path) and getattr(path[0], "key", None) == "groups"
+        off = 1 if stacked else 0                # leading scan-group dim
+        base = [None] * leaf.ndim
+        if name == "pos":
+            return P(*base)
+        if leaf.ndim > off:
+            base[off] = batch_axis               # batch dim
+        if name in ("k", "v") and leaf.ndim == off + 4:
+            base[off + 2] = kv_axis
+            if kv_axis is None and attn_seq_axis is not None:
+                base[off + 1] = attn_seq_axis
+        elif name in ("ckv", "krope") and leaf.ndim == off + 3:
+            base[off + 1] = seq_axis
+        elif name == "h":
+            base[off + 1] = state_axis           # (B, Di, N) or (B, W)
+        elif name == "conv" and leaf.ndim == off + 3:
+            base[off + 2] = state_axis           # (B, K-1, Di)
+        return P(*base)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

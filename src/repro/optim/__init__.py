@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, sgd, adam, adamw, adafactor,
+                         apply_updates, global_norm, clip_by_global_norm)
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "adafactor",
+           "apply_updates", "global_norm", "clip_by_global_norm"]

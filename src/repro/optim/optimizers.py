@@ -1,0 +1,167 @@
+"""Pure-JAX optimizers (no optax available offline).
+
+Functional interface mirroring optax:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees matching params, so they vmap over the FL client
+dimension (mode A) and shard like the parameters they track.  ``adafactor``
+keeps factored second moments (rows/cols) — the memory-frugal choice for the
+314B/236B architectures (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+# --------------------------------------------------------------------- #
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------- #
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                step = step - lr * weight_decay * p.astype(jnp.float32)
+            return step
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), m, v)
+        else:
+            updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+# --------------------------------------------------------------------- #
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, sequential: bool = False,
+              compute_dtype=None) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018).
+
+    For leaves with ndim >= 2 the last two dims are factored into row/col
+    accumulators; smaller leaves keep a full accumulator.  State is O(n+m)
+    per (n, m) matrix — what lets grok-1/deepseek-v2 train on a 16 GB/chip
+    pod (DESIGN.md §5).
+
+    ``sequential=True`` chains leaf updates through
+    ``lax.optimization_barrier`` so XLA cannot overlap the fp32 update
+    temporaries of every leaf at once — measured to be the difference
+    between ~46 GB and fitting HBM on grok-1 train (EXPERIMENTS.md §Perf)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"acc": jax.tree.map(leaf, params,
+                                    is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+        def leaf(g, acc):
+            g = g.astype(compute_dtype or jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "r" in acc:
+                r = beta * acc["r"] + (1 - beta) * g2.mean(axis=-1).astype(jnp.float32)
+                c = beta * acc["c"] + (1 - beta) * g2.mean(axis=-2).astype(jnp.float32)
+                rc = r / jnp.maximum(r.mean(axis=-1, keepdims=True), eps)
+                vhat = (rc[..., None] * c[..., None, :]).astype(g.dtype)
+                new = {"r": r, "c": c}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                vhat = v
+                new = {"v": v}
+            u = g / jnp.sqrt(vhat + eps)
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        out = []
+        prev = None
+        for g, a in zip(flat_g, flat_a):
+            if sequential and prev is not None:
+                # serialize: this leaf's grad depends on the previous
+                # leaf's finished update, bounding transient liveness
+                prev, g = jax.lax.optimization_barrier((prev, g))
+            u, new_acc = leaf(g, a)
+            prev = u
+            out.append((u, new_acc))
+        updates = treedef.unflatten([o[0] for o in out])
+        acc = treedef.unflatten([o[1] for o in out])
+        return updates, {"acc": acc, "t": t}
+
+    return Optimizer(init, update)
+
+
+REGISTRY = {"sgd": sgd, "adam": adam, "adamw": adamw, "adafactor": adafactor}

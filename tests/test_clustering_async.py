@@ -1,0 +1,70 @@
+"""K-means clustering, tolerance bound (Alg. 2) and async federation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AsyncFLConfig, AsyncFederation, cluster_devices,
+                        kmeans, run_sync_baseline, tolerance_bound)
+from repro.core.twin import init_twins, sample_deviation
+from repro.data import dirichlet_partition, make_classification
+
+
+def test_kmeans_separates_obvious_clusters():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (20, 2)) * 0.1
+    b = jax.random.normal(key, (20, 2)) * 0.1 + 10.0
+    assign, cent = kmeans(key, jnp.concatenate([a, b]), 2)
+    assign = np.asarray(assign)
+    assert len(set(assign[:20])) == 1 and len(set(assign[20:])) == 1
+    assert assign[0] != assign[20]
+
+
+def test_cluster_devices_groups_similar_compute():
+    key = jax.random.PRNGKey(1)
+    twins = sample_deviation(key, init_twins(key, 16))
+    assign, _ = cluster_devices(key, twins, 4)
+    assert set(np.asarray(assign)) <= set(range(4))
+
+
+def test_tolerance_bound_caps_slow_clusters():
+    a = jnp.asarray([10, 10])
+    freq = jnp.asarray([2.0, 0.2])          # fast, slow
+    t_min = 10 / 2.0                        # fastest cluster's round time T_m
+    capped = tolerance_bound(a, freq, jnp.asarray(t_min), alpha=1.0)
+    assert int(capped[0]) == 10             # fast keeps its frequency
+    assert int(capped[1]) < 10              # slow is capped
+    assert int(capped[1]) >= 1
+
+
+def _small_fed(n_clusters, malicious=0.0, seed=0, secs=6.0):
+    key = jax.random.PRNGKey(seed)
+    data = make_classification(key, n=1536, dim=48)
+    parts = dirichlet_partition(key, data.y, 8)
+    cfg = AsyncFLConfig(n_devices=8, n_clusters=n_clusters, local_batch=32,
+                        sim_seconds=secs, malicious_frac=malicious, seed=seed)
+    return AsyncFederation(cfg, data, parts), data
+
+
+def test_async_federation_learns():
+    fed, data = _small_fed(2)
+    tr = fed.run(eval_every=1.5)
+    assert tr.accs[-1] > 0.5
+    assert tr.accs[-1] > tr.accs[0]
+
+
+def test_trust_downweights_malicious():
+    fed, _ = _small_fed(2, malicious=0.25, seed=3)
+    fed.run(eval_every=2.0)
+    rep = np.asarray(fed.rep)
+    mal = fed.malicious
+    assert rep[~mal].mean() > rep[mal].mean()
+
+
+def test_more_clusters_do_more_rounds():
+    """Straggler elimination: more clusters => more (async) aggregations in
+    the same simulated wall-clock (Fig. 6/7 mechanism)."""
+    f1, _ = _small_fed(1, seed=5)
+    f4, _ = _small_fed(4, seed=5)
+    t1 = f1.run(eval_every=100.0)
+    t4 = f4.run(eval_every=100.0)
+    assert f4.agg_count > f1.agg_count

@@ -1,0 +1,81 @@
+"""Data pipeline (non-IID partitioner) and checkpoint round-trip tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.data import (dirichlet_partition, federated_batches, lm_batches,
+                        make_classification, token_stream)
+
+
+def test_partition_covers_all_indices_once():
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, n=2000, dim=8)
+    parts = dirichlet_partition(key, data.y, 8)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 2000
+    assert len(set(allidx.tolist())) == 2000
+
+
+@given(st.floats(0.05, 5.0), st.integers(2, 10))
+@settings(max_examples=10, deadline=None)
+def test_partition_skew_property(alpha, n_clients):
+    key = jax.random.PRNGKey(int(alpha * 100) + n_clients)
+    data = make_classification(key, n=1000, dim=4)
+    parts = dirichlet_partition(key, data.y, n_clients, alpha=alpha)
+    assert sum(len(p) for p in parts) == 1000
+
+
+def test_low_alpha_is_more_skewed_than_high():
+    key = jax.random.PRNGKey(3)
+    data = make_classification(key, n=4000, dim=4)
+    y = np.asarray(data.y)
+
+    def skew(alpha):
+        parts = dirichlet_partition(jax.random.PRNGKey(7), y, 8, alpha=alpha)
+        fracs = []
+        for p in parts:
+            if len(p) == 0:
+                continue
+            c = np.bincount(y[p], minlength=10) / len(p)
+            fracs.append(c.max())
+        return np.mean(fracs)
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_federated_batches_shapes():
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, n=512, dim=8)
+    parts = dirichlet_partition(key, data.y, 4)
+    x, y = federated_batches(key, data.x, data.y, parts, batch=16)
+    assert x.shape == (4, 16, 8) and y.shape == (4, 16)
+
+
+def test_token_stream_zipf():
+    toks = np.asarray(token_stream(jax.random.PRNGKey(0), 20000, 1000))
+    counts = np.bincount(toks, minlength=1000)
+    assert counts[:10].sum() > counts[500:510].sum()   # head-heavy
+
+
+def test_lm_batches_next_token():
+    b = next(iter(lm_batches(jax.random.PRNGKey(0), 64, 2, 8, 1)))
+    assert b["tokens"].shape == (2, 8) and b["labels"].shape == (2, 8)
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.bfloat16), jnp.zeros((), jnp.int32)],
+            "c": {"d": jnp.asarray(2.5)}}
+    with tempfile.TemporaryDirectory() as d:
+        f = save_checkpoint(d, 42, tree)
+        assert latest_checkpoint(d) == f
+        got = load_checkpoint(f, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))

@@ -1,0 +1,95 @@
+"""Per-kernel allclose vs ref.py oracles, sweeping shapes and dtypes
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, rglru_scan, selective_scan,
+                           trust_aggregate, trust_aggregate_tree)
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("C,N,dtype", [
+    (4, 1000, jnp.float32), (16, 8192, jnp.float32),
+    (8, 20000, jnp.bfloat16), (2, 100, jnp.float32),
+])
+def test_trust_aggregate_sweep(C, N, dtype):
+    key = jax.random.PRNGKey(C * N)
+    x = jax.random.normal(key, (C, N)).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (C,)))
+    got = trust_aggregate(x, w, interpret=True)
+    want = ref.trust_aggregate_ref(x, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_trust_aggregate_tree_matches_tree_average():
+    from repro.core.trust import trust_weighted_average
+    key = jax.random.PRNGKey(0)
+    tree = {"w": jax.random.normal(key, (4, 8, 16)),
+            "b": jax.random.normal(key, (4, 5))}
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    got = trust_aggregate_tree(tree, w, interpret=True)
+    want = trust_weighted_average(tree, w)
+    for k in tree:
+        np.testing.assert_allclose(got[k], want[k], atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,d,window,softcap,dtype", [
+    (1, 256, 2, 64, 0, 0.0, jnp.float32),
+    (2, 512, 4, 64, 0, 0.0, jnp.float32),
+    (1, 512, 2, 128, 128, 0.0, jnp.float32),      # sliding window
+    (1, 256, 2, 64, 0, 30.0, jnp.float32),        # grok softcap
+    (1, 256, 2, 64, 0, 0.0, jnp.bfloat16),
+])
+def test_flash_attention_sweep(B, S, H, d, window, softcap, dtype):
+    key = jax.random.PRNGKey(S + H)
+    q = (jax.random.normal(key, (B, S, H, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, d)) * 0.3).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, d)).astype(dtype)
+    got = flash_attention(q, k, v, bq=128, bk=128, window=window,
+                          softcap=softcap, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=window, softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,Di,N,bd,dtype", [
+    (1, 32, 64, 8, 32, jnp.float32),
+    (2, 64, 128, 16, 64, jnp.float32),
+    (1, 48, 64, 8, 64, jnp.bfloat16),
+])
+def test_selective_scan_sweep(B, S, Di, N, bd, dtype):
+    key = jax.random.PRNGKey(S)
+    xc = (jax.random.normal(key, (B, S, Di)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, Di))).astype(dtype)
+    Bc = (jax.random.normal(jax.random.fold_in(key, 2), (B, S, N)) * 0.5).astype(dtype)
+    Cc = (jax.random.normal(jax.random.fold_in(key, 3), (B, S, N)) * 0.5).astype(dtype)
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (Di, N)))
+    y, h = selective_scan(xc, dt, Bc, Cc, A, bd=bd, interpret=True)
+    yr, hr = ref.selective_scan_ref(xc, dt, Bc, Cc, A)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=0.05)
+    np.testing.assert_allclose(h, hr, atol=tol, rtol=0.05)
+
+
+@pytest.mark.parametrize("B,S,W,bw,dtype", [
+    (1, 32, 64, 64, jnp.float32),
+    (2, 64, 256, 128, jnp.float32),
+    (1, 64, 128, 128, jnp.bfloat16),
+])
+def test_rglru_scan_sweep(B, S, W, bw, dtype):
+    key = jax.random.PRNGKey(W)
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, W))).astype(dtype)
+    bx = (jax.random.normal(jax.random.fold_in(key, 1), (B, S, W)) * 0.3).astype(dtype)
+    y, h = rglru_scan(a, bx, bw=bw, interpret=True)
+    yr, hr = ref.rglru_scan_ref(a, bx)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=0.05)
+    np.testing.assert_allclose(h, hr, atol=tol, rtol=0.05)

@@ -1,0 +1,64 @@
+"""Lyapunov deficit queue (Eqn 12) and energy model (Eqns 7-8) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy, lyapunov
+
+
+class TestQueue:
+    def test_evolution_matches_eqn12(self):
+        q = lyapunov.init_queue(budget=10.0, horizon=10)
+        q = lyapunov.step_queue(q, consumed=3.0)   # 3 - 1 = 2
+        assert float(q.q) == 2.0
+        q = lyapunov.step_queue(q, consumed=0.5)   # 2 + 0.5 - 1 = 1.5
+        assert float(q.q) == 1.5
+
+    @given(st.lists(st.floats(0, 5), min_size=1, max_size=50),
+           st.floats(1.0, 100.0))
+    @settings(max_examples=30, deadline=None)
+    def test_queue_never_negative(self, consumptions, budget):
+        q = lyapunov.init_queue(budget=budget, horizon=20)
+        for c in consumptions:
+            q = lyapunov.step_queue(q, c)
+            assert float(q.q) >= 0.0
+
+    def test_underspending_drains_queue(self):
+        q = lyapunov.init_queue(budget=10.0, horizon=10)
+        q = lyapunov.step_queue(q, 5.0)
+        for _ in range(10):
+            q = lyapunov.step_queue(q, 0.0)
+        assert float(q.q) == 0.0
+
+    def test_v_schedule_grows(self):
+        assert lyapunov.v_schedule(10) > lyapunov.v_schedule(0)
+
+    def test_reward_penalizes_backlog(self):
+        q0 = lyapunov.init_queue(10.0, 10)
+        q1 = q0._replace(q=jnp.asarray(5.0))
+        r0 = lyapunov.drift_penalty_reward(2.0, 1.0, 1.0, q0, v=1.0)
+        r1 = lyapunov.drift_penalty_reward(2.0, 1.0, 1.0, q1, v=1.0)
+        assert float(r0) > float(r1)
+
+
+class TestEnergy:
+    def test_compute_energy_inverse_in_freq(self):
+        e = energy.compute_energy(jnp.asarray([0.5, 1.0, 2.0]))
+        assert e[0] > e[1] > e[2] > 0
+
+    def test_comm_energy_worse_in_bad_channel(self):
+        key = jax.random.PRNGKey(0)
+        n = 256
+        good = energy.comm_energy(jnp.zeros(n, jnp.int32), key)
+        bad = energy.comm_energy(jnp.full((n,), 2, jnp.int32), key)
+        assert float(bad.mean()) > float(good.mean())
+
+    def test_channel_transition_stochastic(self):
+        t = energy.channel_transition(0.7)
+        np.testing.assert_allclose(np.asarray(t.sum(1)), 1.0, rtol=1e-6)
+        key = jax.random.PRNGKey(1)
+        s = jnp.zeros(2048, jnp.int32)
+        s = energy.step_channel(key, s, t)
+        frac_good = float((s == 0).mean())
+        assert 0.6 < frac_good < 0.8

@@ -1,0 +1,95 @@
+"""Unit + property tests for the trust/aggregation core (Eqns 4-6, 19)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trust
+from repro.core.twin import TwinState, init_twins, sample_deviation
+
+
+def _twins(n, key=0):
+    return sample_deviation(jax.random.PRNGKey(key + 1),
+                            init_twins(jax.random.PRNGKey(key), n))
+
+
+class TestLearningQuality:
+    def test_outlier_gets_low_quality(self):
+        upd = np.tile(np.ones(16), (8, 1)).astype(np.float32)
+        upd[3] = 50.0                      # malicious/lazy outlier
+        q = trust.learning_quality(jnp.asarray(upd))
+        assert q[3] == q.min()
+        assert (q[np.arange(8) != 3] > q[3]).all()
+
+    def test_range(self):
+        upd = jax.random.normal(jax.random.PRNGKey(0), (6, 32))
+        q = trust.learning_quality(upd)
+        assert (q > 0).all() and (q <= 1).all()
+
+
+class TestGradientDiversity:
+    def test_sybils_downweighted(self):
+        key = jax.random.PRNGKey(0)
+        upd = jax.random.normal(key, (6, 64))
+        upd = upd.at[4].set(upd[5] * 1.001)    # coordinated pair
+        d = trust.gradient_diversity(upd)
+        assert d[4] < d[0] and d[5] < d[0]
+
+
+class TestAggregation:
+    def test_trust_weighted_average_matches_manual(self):
+        key = jax.random.PRNGKey(1)
+        tree = {"a": jax.random.normal(key, (4, 3, 5)),
+                "b": jax.random.normal(key, (4, 7))}
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+        out = trust.trust_weighted_average(tree, w)
+        want = sum(w[i] * tree["a"][i] for i in range(4))
+        np.testing.assert_allclose(out["a"], want, rtol=1e-6)
+
+    def test_time_weighted_decay_monotonic(self):
+        tree = {"a": jnp.stack([jnp.ones(4) * i for i in range(3)])}
+        stale = jnp.asarray([0.0, 1.0, 2.0])
+        _, w = trust.time_weighted_average(tree, stale)
+        assert w[0] > w[1] > w[2] > 0
+        np.testing.assert_allclose(float(w.sum()), 1.0, rtol=1e-6)
+
+    @given(st.integers(2, 12), st.integers(0, 10 ** 6))
+    @settings(max_examples=20, deadline=None)
+    def test_weights_form_simplex(self, n, seed):
+        rep = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=-1.0,
+                                 maxval=5.0)
+        w = trust.trust_weights(rep)
+        assert float(w.sum()) == pytest.approx(1.0, abs=1e-5)
+        assert (np.asarray(w) >= 0).all()
+
+    @given(st.integers(2, 8), st.integers(0, 10 ** 6))
+    @settings(max_examples=20, deadline=None)
+    def test_aggregation_is_convex_combination(self, n, seed):
+        """Aggregated params stay inside the per-coordinate client hull."""
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (n, 16))
+        rep = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) + 0.01
+        w = trust.trust_weights(rep)
+        agg = trust.trust_weighted_average(x, w)
+        assert (np.asarray(agg) <= np.asarray(x.max(0)) + 1e-5).all()
+        assert (np.asarray(agg) >= np.asarray(x.min(0)) - 1e-5).all()
+
+
+class TestBelief:
+    def test_low_deviation_higher_belief(self):
+        tw = _twins(4)
+        tw = tw._replace(freq_dev=jnp.asarray([0.01, 0.1, 0.2, 0.3]),
+                         dev_estimate=jnp.zeros(4))
+        q = jnp.ones(4) * 0.5
+        b = trust.belief(tw, q, pkt_fail=0.05)
+        assert b[0] > b[1] > b[2] > b[3]
+
+    def test_malicious_interactions_reduce_belief(self):
+        tw = _twins(2)
+        tw = tw._replace(freq_dev=jnp.ones(2) * 0.1,
+                         dev_estimate=jnp.zeros(2),
+                         alpha=jnp.asarray([10.0, 10.0]),
+                         beta=jnp.asarray([0.0, 20.0]))
+        b = trust.belief(tw, jnp.ones(2) * 0.5, pkt_fail=0.05)
+        assert b[0] > b[1]
