@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Single CI entry point: tier-1 tests + headless example + scenario CLI.
+#
+#   bash benchmarks/smoke.sh          # full tier-1 suite + smoke drivers
+#   bash benchmarks/smoke.sh --fast   # skip the pytest suite
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== quickstart example (headless) =="
+python examples/quickstart.py > /tmp/quickstart.out
+tail -n 3 /tmp/quickstart.out
+
+echo "== scenario CLI =="
+python -m repro.api.run --scenario sync-baseline --sim-seconds 4 \
+    --devices 8 --clusters 1 --eval-every 2
+python -m repro.api.run --scenario byzantine --sim-seconds 4 \
+    --devices 8 --clusters 2 --eval-every 2
+python -m repro.api.run --scenario lm-modeA --rounds 2
+
+echo "smoke OK"

@@ -1,24 +1,29 @@
 """Straggler elimination via clustering (paper Figs 6/7): sweep the number
-of K-means clusters and report accuracy-vs-simulated-time.
+of K-means clusters through the unified API and report accuracy vs
+simulated time.  The spec is data — the sweep is four dataclass replaces.
 
     PYTHONPATH=src python examples/async_clusters.py
 """
-import jax
+import dataclasses
 
-import repro.core as core
-from repro.data import dirichlet_partition, make_classification
+from repro.api import (ControllerSpec, Federation, FederationSpec,
+                       FleetSpec)
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    data = make_classification(key, n=4096, dim=784)
-    parts = dirichlet_partition(key, data.y, 16)
+    base = FederationSpec(
+        fleet=FleetSpec(n_devices=16),
+        controller=ControllerSpec("fixed", {"a": 5}),
+        sim_seconds=15.0,
+        local_batch=64,
+        seed=0,
+    )
 
     print("clusters,final_acc,aggregations,energy")
     for k in [1, 2, 4, 8]:
-        cfg = core.AsyncFLConfig(n_devices=16, n_clusters=k, local_batch=64,
-                                 sim_seconds=15.0)
-        fed = core.AsyncFederation(cfg, data, parts)
+        spec = base.replace(clustering=dataclasses.replace(
+            base.clustering, n_clusters=k))
+        fed = Federation.from_spec(spec)
         tr = fed.run(eval_every=3.0)
         print(f"{k},{tr.accs[-1]:.3f},{fed.agg_count},{fed.energy_used:.1f}")
 

@@ -1,54 +1,42 @@
-"""Quickstart: the paper's full pipeline end to end.
+"""Quickstart: the paper's full pipeline through the unified API.
 
-Digital twins of a heterogeneous device fleet -> K-means clustering ->
-DQN aggregation-frequency agent trained on the DT-simulated environment ->
-asynchronous clustered federated learning with trust-weighted aggregation
-on a synthetic MNIST-shaped task.
+One declarative `FederationSpec` drives everything: digital twins of a
+heterogeneous device fleet -> K-means clustering -> DQN aggregation-frequency
+agent (trained on the DT-simulated environment, §IV-C: the agent interacts
+with the twins, not the devices) -> asynchronous clustered federated learning
+with trust-weighted aggregation (Pallas kernel hot path) on a synthetic
+MNIST-shaped task.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
-import repro.core as core
-from repro.core import envs
-from repro.data import dirichlet_partition, make_classification
+from repro.api import (ClusteringSpec, ControllerSpec, Federation,
+                       FederationSpec, FleetSpec)
 
 
 def main():
-    key = jax.random.PRNGKey(0)
+    spec = FederationSpec(
+        fleet=FleetSpec(n_devices=16, malicious_frac=0.125),
+        clustering=ClusteringSpec(n_clusters=4),
+        # the registry factory pretrains an Alg.-1 DQN on the DT env
+        controller=ControllerSpec("dqn", {"episodes": 4, "horizon": 30,
+                                          "seed": 0}),
+        sim_seconds=20.0,
+        local_batch=64,
+        seed=0,
+    )
+    print("spec:", {k: v for k, v in spec.to_dict().items()
+                    if k in ("scale", "sim_seconds", "seed")})
 
-    # 1. federated data: 16 devices with non-IID (Dirichlet) class skew
-    data = make_classification(key, n=4096, dim=784)
-    parts = dirichlet_partition(key, data.y, 16, alpha=0.5)
-    print(f"devices: 16, shards: {[len(p) for p in parts]}")
-
-    # 2. train the DQN frequency agent on the DT-simulated environment
-    #    (paper §IV-C: the agent interacts with the twins, not the devices)
-    p = envs.EnvParams(horizon=30)
-    dcfg = core.DQNConfig(buffer_size=512, batch_size=32, lr=2e-3)
-    agent = core.init_dqn(key, dcfg)
-    step_env = jax.jit(envs.step, static_argnums=2)
-    for ep in range(4):
-        s, obs = envs.reset(jax.random.fold_in(key, ep), p)
-        done, tot = False, 0.0
-        while not done:
-            key, ka, kt = jax.random.split(key, 3)
-            a = core.select_action(ka, agent, dcfg, obs)
-            s, obs2, r, done, _ = step_env(s, a, p)
-            agent = core.store(agent, obs, a, r, obs2)
-            agent, _ = core.dqn_train_step(kt, agent, dcfg)
-            obs, tot = obs2, tot + float(r)
-        print(f"dqn episode {ep}: return {tot:.2f}")
-
-    # 3. asynchronous clustered FL with trust-weighted aggregation
-    cfg = core.AsyncFLConfig(n_devices=16, n_clusters=4, local_batch=64,
-                             sim_seconds=20.0, malicious_frac=0.125)
-    fed = core.AsyncFederation(cfg, data, parts, agent=agent, dqn_cfg=dcfg)
+    fed = Federation.from_spec(spec)       # synthetic non-IID data built in
     trace = fed.run(eval_every=2.0)
-    for t, a in zip(trace.times, trace.accs):
-        print(f"t={t:5.1f}s  acc={a:.3f}")
+
+    for r in trace.records:
+        print(f"t={r.t:5.1f}s  round={r.round:3d}  a={r.a}  "
+              f"acc={r.acc:.3f}  loss={r.loss:.3f}")
     print(f"aggregations: {fed.agg_count}, energy: {fed.energy_used:.1f}")
+
     rep = jax.device_get(fed.rep)
     print("reputation (malicious flagged *):")
     for i, r in enumerate(rep):

@@ -1,0 +1,44 @@
+"""Unified federation API — the single public entry point.
+
+    from repro.api import Federation, FederationSpec
+
+    trace = Federation.from_spec(FederationSpec()).run()
+
+Layers:
+  spec        declarative `FederationSpec` tree (+ dict round-trip)
+  registry    named component registries with decorator registration
+  components  aggregators (Eqn 6 / robust), controllers (fixed / DQN /
+              Lyapunov-greedy), task adapters (mlp / lm)
+  engine      device-scale discrete-event simulator + datacenter fl_step
+  records     one `RoundRecord`/`FLTrace` schema for both scales
+  run         `python -m repro.api.run --scenario ...` CLI presets
+
+Legacy entry points (`repro.core.AsyncFederation`, `run_sync_baseline`,
+`build_train_step`) keep working as thin shims; see API.md for migration.
+"""
+from .components import (ControllerCtx, DQNController, FixedController,
+                         LMTask, LyapunovGreedyController, MLPTask,
+                         RobustAggregator, WeightedAggregator)
+from .federation import Federation
+from .records import FLTrace, RoundRecord
+from .registry import (AGGREGATORS, CONTROLLERS, SCENARIOS, TASKS,
+                       register_aggregator, register_controller,
+                       register_scenario, register_task)
+from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
+                   ControllerSpec, DATACENTER_SCALE, DEVICE_SCALE,
+                   FederationSpec, FleetSpec, PrivacySpec, TaskSpec,
+                   legacy_spec)
+from . import scenarios  # noqa: F401  (populates SCENARIOS presets)
+
+__all__ = [
+    "Federation", "FederationSpec", "FLTrace", "RoundRecord",
+    "FleetSpec", "ClusteringSpec", "ControllerSpec", "AggregatorSpec",
+    "TaskSpec", "PrivacySpec", "ChannelSpec", "legacy_spec",
+    "DEVICE_SCALE", "DATACENTER_SCALE",
+    "AGGREGATORS", "CONTROLLERS", "TASKS", "SCENARIOS",
+    "register_aggregator", "register_controller", "register_task",
+    "register_scenario",
+    "WeightedAggregator", "RobustAggregator", "FixedController",
+    "DQNController", "LyapunovGreedyController", "MLPTask", "LMTask",
+    "ControllerCtx",
+]

@@ -1,0 +1,347 @@
+"""Pluggable federation components and their registry entries.
+
+Three component protocols, all duck-typed:
+
+Aggregator        ``__call__(client_params, weights) -> aggregated pytree``
+                  (client_params leaves carry a leading client dim)
+FrequencyController
+                  ``select(ctx) -> int`` raw a_i before the Alg.-2 tolerance
+                  bound; optional ``observe(ctx, consumed, loss)`` feedback
+                  hook after the round; ``n_actions`` caps a_i.
+TaskAdapter       model/task plug: init / loss / local training / metrics.
+
+Registration makes every paper mechanism (trust Eqn 6, robust baselines,
+DQN Alg. 1, Lyapunov Eqn 12-15) a named choice in `FederationSpec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn as dqn_lib
+from repro.core import envs
+from repro.core.energy import comm_energy, compute_energy
+from repro.core.lyapunov import (DeficitQueue, drift_penalty_reward,
+                                 init_queue, step_queue, v_schedule)
+from repro.core.mlp import (accuracy, classifier_loss, init_mlp_classifier,
+                            mlp_hidden_mean)
+from repro.core.robust import AGGREGATORS as ROBUST_RULES
+from repro.core.trust import trust_weighted_average
+from repro.core.twin import calibrated_freq
+from repro.kernels.ops import INTERPRET, trust_aggregate_tree
+
+from .registry import (register_aggregator, register_controller,
+                       register_task)
+
+
+# --------------------------------------------------------------------- #
+# controller context
+# --------------------------------------------------------------------- #
+class ControllerCtx(NamedTuple):
+    """What a frequency controller may look at when choosing a_i."""
+    round: int                       # global round counter
+    cluster: int                     # cluster index being scheduled
+    obs: Callable[[], jnp.ndarray]   # lazy DQN observation (OBS_DIM,)
+    cluster_loss: float              # mean twin loss over the cluster
+    cluster_freq: float              # straggler (min) calibrated frequency
+    mean_freq: float                 # mean calibrated frequency in cluster
+    channel_good_frac: float         # fraction of members in the good state
+    energy_used: float               # cumulative energy so far
+
+
+# --------------------------------------------------------------------- #
+# aggregators (Eqn 6 + robust baselines)
+# --------------------------------------------------------------------- #
+class WeightedAggregator:
+    """Trust/uniform weighted average; hot path through the Pallas
+    ``trust_aggregate`` kernel (interpret=True on CPU), jnp fallback."""
+
+    def __init__(self, uniform: bool = False, use_kernel: bool = True):
+        self.uniform = uniform
+        self.use_kernel = use_kernel
+
+    def __call__(self, client_params, weights):
+        if self.uniform:
+            n = weights.shape[0]
+            weights = jnp.full_like(weights, 1.0 / n)
+        if self.use_kernel:
+            return trust_aggregate_tree(client_params, weights,
+                                        interpret=INTERPRET)
+        return trust_weighted_average(client_params, weights)
+
+
+class RobustAggregator:
+    """Byzantine-robust rules from repro.core.robust; ignores trust weights
+    (that is their point: no reputation signal needed)."""
+
+    def __init__(self, rule: str, **kw):
+        self.rule_name = rule
+        self._rule = ROBUST_RULES[rule]
+        self._kw = kw
+
+    def __call__(self, client_params, weights):
+        del weights
+        return self._rule(client_params, **self._kw)
+
+
+@register_aggregator("trust")
+def _trust(params: Dict[str, Any]):
+    return WeightedAggregator(uniform=False,
+                              use_kernel=params.get("use_kernel", True))
+
+
+@register_aggregator("fedavg")
+def _fedavg(params: Dict[str, Any]):
+    return WeightedAggregator(uniform=True,
+                              use_kernel=params.get("use_kernel", True))
+
+
+def _register_robust(name):
+    @register_aggregator(name)
+    def _build(params: Dict[str, Any], _name=name):
+        return RobustAggregator(_name, **{k: v for k, v in params.items()
+                                          if k != "use_kernel"})
+
+
+for _name in ROBUST_RULES:
+    _register_robust(_name)
+
+
+# --------------------------------------------------------------------- #
+# frequency controllers
+# --------------------------------------------------------------------- #
+class FixedController:
+    """Benchmark scheme: constant a_i (still tolerance-bounded by Alg. 2)."""
+
+    def __init__(self, a: int = 5, n_actions: int = 10):
+        self.a = int(a)
+        self.n_actions = int(n_actions)
+
+    def select(self, ctx: ControllerCtx) -> int:
+        return self.a
+
+    def observe(self, ctx, consumed, loss):
+        pass
+
+
+class DQNController:
+    """Greedy policy of a trained Alg.-1 DQN agent.
+
+    Build from a live agent (``DQNController(agent, cfg)``) or let the
+    registry factory train one on the DT-simulated environment — the paper's
+    headline mechanism: the agent interacts with the twins, not the devices.
+    """
+
+    def __init__(self, agent: dqn_lib.DQNState, cfg: dqn_lib.DQNConfig):
+        self.agent = agent
+        self.cfg = cfg
+        self.n_actions = cfg.n_actions
+
+    def select(self, ctx: ControllerCtx) -> int:
+        q = dqn_lib.q_values(self.agent.eval_params, ctx.obs())
+        return int(jnp.argmax(q)) + 1
+
+    def observe(self, ctx, consumed, loss):
+        pass
+
+    @classmethod
+    def pretrain(cls, seed: int = 0, episodes: int = 4, horizon: int = 25,
+                 p_good: float = 0.5, calibrate_dt: bool = True,
+                 buffer_size: int = 512, batch_size: int = 32,
+                 lr: float = 2e-3) -> "DQNController":
+        """Train a fresh agent on the DT environment (§IV-C)."""
+        p = envs.EnvParams(horizon=horizon, p_good=p_good,
+                           calibrate_dt=calibrate_dt)
+        cfg = dqn_lib.DQNConfig(buffer_size=buffer_size,
+                                batch_size=batch_size, lr=lr)
+        agent = dqn_lib.init_dqn(jax.random.PRNGKey(seed), cfg)
+        key = jax.random.PRNGKey(seed + 1)
+        step_env = jax.jit(envs.step, static_argnums=2)
+        for ep in range(episodes):
+            s, obs = envs.reset(jax.random.fold_in(key, ep), p)
+            done = False
+            while not done:
+                key, ka, kt = jax.random.split(key, 3)
+                a = dqn_lib.select_action(ka, agent, cfg, obs)
+                s, obs2, r, done, _ = step_env(s, a, p)
+                agent = dqn_lib.store(agent, obs, a, r, obs2)
+                agent, _ = dqn_lib.train_step(kt, agent, cfg)
+                obs = obs2
+        return cls(agent, cfg)
+
+
+class LyapunovGreedyController:
+    """One-step drift-plus-penalty greedy controller (Eqns 12-15).
+
+    No learned policy: each slot it scores every a in {1..n_actions} with
+    the paper's P2 objective  v·ΔF̂(a) − Q(i)·(a·Ê_cmp + Ê_com)  using the
+    twin-estimated energy and an exponential loss-decay model, picks the
+    argmax, and advances the deficit queue with the realized consumption.
+    A model-free baseline between `fixed` and the trained DQN.
+    """
+
+    def __init__(self, budget: float = 250.0, horizon: int = 100,
+                 kappa: float = 0.08, f_star: float = 0.1,
+                 v0: float = 1.0, v_growth: float = 0.02,
+                 n_actions: int = 10):
+        self.queue = init_queue(budget, horizon)
+        self.kappa = kappa
+        self.f_star = f_star
+        self.v0 = v0
+        self.v_growth = v_growth
+        self.n_actions = int(n_actions)
+
+    def _estimate_cost(self, ctx: ControllerCtx, a: int) -> float:
+        e_cmp = float(compute_energy(jnp.asarray([ctx.mean_freq]))[0])
+        # expected comm energy ~ model_bits / rate at the mean channel mix;
+        # use the good-state fraction as a rate proxy (cheap, deterministic)
+        e_com = e_cmp * (2.0 - ctx.channel_good_frac)
+        return a * e_cmp + e_com
+
+    def select(self, ctx: ControllerCtx) -> int:
+        v = float(v_schedule(ctx.round, self.v0, self.v_growth))
+        loss = ctx.cluster_loss
+        best_a, best_r = 1, -np.inf
+        for a in range(1, self.n_actions + 1):
+            pred = self.f_star + (loss - self.f_star) * np.exp(-self.kappa * a)
+            cost = self._estimate_cost(ctx, a)
+            r = float(drift_penalty_reward(loss, pred, cost, self.queue, v))
+            if r > best_r:
+                best_a, best_r = a, r
+        return best_a
+
+    def observe(self, ctx, consumed, loss):
+        self.queue = step_queue(self.queue, consumed)
+
+
+@register_controller("fixed")
+def _fixed(params: Dict[str, Any]):
+    return FixedController(a=params.get("a", 5),
+                           n_actions=params.get("n_actions", 10))
+
+
+@register_controller("dqn")
+def _dqn(params: Dict[str, Any]):
+    agent = params.get("agent")
+    if agent is not None:
+        return DQNController(agent, params.get(
+            "dqn_cfg", dqn_lib.DQNConfig()))
+    kw = {k: v for k, v in params.items() if k not in ("agent", "dqn_cfg")}
+    return DQNController.pretrain(**kw)
+
+
+@register_controller("lyapunov")
+def _lyapunov(params: Dict[str, Any]):
+    return LyapunovGreedyController(**params)
+
+
+# --------------------------------------------------------------------- #
+# task adapters
+# --------------------------------------------------------------------- #
+class MLPTask:
+    """The paper's device-scale MNIST-shaped classifier."""
+
+    def __init__(self, hidden: int = 200, n_classes: int = 10):
+        self.hidden = hidden
+        self.n_classes = n_classes
+        self._client_sgd_v = jax.jit(
+            jax.vmap(self._client_sgd, in_axes=(0, 0, None, None)),
+            static_argnums=3)
+        self._losses_v = jax.vmap(classifier_loss, in_axes=(0, 0))
+
+    @staticmethod
+    def _client_sgd(params, batch, lr, steps):
+        def one(_, p):
+            g = jax.grad(classifier_loss)(p, batch)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return jax.lax.fori_loop(0, steps, one, params)
+
+    def init(self, key, dim: int):
+        return init_mlp_classifier(key, dim=dim, hidden=self.hidden,
+                                   n_classes=self.n_classes)
+
+    def local_train(self, stacked_params, batch, lr: float, steps: int):
+        """vmap-ed a_i SGD steps over the member dim."""
+        return self._client_sgd_v(stacked_params, batch, lr, steps)
+
+    def losses(self, stacked_params, batch):
+        return self._losses_v(stacked_params, batch)
+
+    def loss(self, params, batch):
+        return classifier_loss(params, batch)
+
+    def evaluate(self, params, data) -> Dict[str, float]:
+        return {
+            "acc": float(accuracy(params, data.x, data.y)),
+            "loss": float(classifier_loss(
+                params, {"x": data.x[:1024], "y": data.y[:1024]})),
+        }
+
+    def hidden_mean(self, params, x):
+        return mlp_hidden_mean(params, x)
+
+    def corrupt_labels(self, y):
+        """Byzantine label flip used by malicious members."""
+        return (y + 1) % self.n_classes
+
+
+class LMTask:
+    """Datacenter-scale LM task over the sharded fl_step modes.
+
+    ``arch`` names a smoke config from repro.configs, or pass explicit tiny
+    dims (d_model/num_layers/...) for a self-contained config.
+    """
+
+    def __init__(self, arch: Optional[str] = None, mode: str = "fedavg_replica",
+                 seq: int = 16, micro_batch: int = 2, n_micro: int = 1,
+                 local_steps: int = 1, lr: float = 3e-4, **dims):
+        from repro.models import ArchConfig
+        if arch:
+            from repro.configs import get_smoke_config
+            self.cfg = get_smoke_config(arch)
+        else:
+            base = dict(name="api-tiny", arch_type="dense", num_layers=2,
+                        d_model=32, vocab_size=64, num_heads=2,
+                        num_kv_heads=1, d_ff=64)
+            base.update(dims)
+            self.cfg = ArchConfig(**base)
+        self.mode = mode
+        self.seq = seq
+        self.micro_batch = micro_batch
+        self.n_micro = n_micro
+        self.local_steps = local_steps
+        self.lr = lr
+
+    def make_batch(self, key, n_clusters: int, clients: int):
+        from repro.core.fl_step import MODE_B
+        from repro.data import token_stream
+        if self.mode == MODE_B:
+            shape = (n_clusters, self.n_micro, self.micro_batch, self.seq + 1)
+        else:
+            shape = (n_clusters, clients, self.n_micro, self.micro_batch,
+                     self.seq + 1)
+        if self.cfg.num_codebooks > 1:
+            shape = shape[:-1] + (self.cfg.num_codebooks, self.seq + 1)
+        toks = token_stream(key, int(np.prod(shape)),
+                            self.cfg.vocab_size).reshape(shape)
+        batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+        if self.mode == MODE_B:
+            # trust enters as per-example loss weights in mode B
+            batch["weights"] = jnp.ones(
+                (n_clusters, self.n_micro, self.micro_batch))
+        return batch
+
+
+@register_task("mlp")
+def _mlp(params: Dict[str, Any]):
+    return MLPTask(**{k: v for k, v in params.items()
+                      if k in ("hidden", "n_classes")})
+
+
+@register_task("lm")
+def _lm(params: Dict[str, Any]):
+    return LMTask(**params)

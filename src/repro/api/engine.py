@@ -1,0 +1,299 @@
+"""Execution engines behind the `Federation` facade.
+
+`DeviceScaleEngine` is the paper's §IV-D discrete-event simulator (formerly
+the `AsyncFederation` monolith) with every policy choice delegated to a
+pluggable component: the frequency controller picks a_i, the aggregator
+folds member updates (Eqn 6 through the Pallas ``trust_aggregate`` kernel by
+default), the task adapter owns the model, and the shared Eqn-19
+`time_weighted_average` closes each global round.  The legacy
+`AsyncFederation` entry point is a shim over this engine, so both entry
+points produce identical traces at a fixed seed
+(tests/test_api.py::test_spec_parity_with_legacy covers the shim's
+config-translation path).
+
+`DatacenterEngine` drives the sharded `fl_step` mode-A/B train steps under
+the same controller protocol and emits the same `RoundRecord` trace.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import cluster_devices, tolerance_bound
+from repro.core.energy import (channel_transition, comm_energy,
+                               compute_energy, step_channel)
+from repro.core.trust import (belief, gradient_diversity, learning_quality,
+                              time_weighted_average, trust_weights,
+                              update_reputation)
+from repro.core.twin import (TwinState, calibrate, calibrated_freq,
+                             init_twins, observe_round, sample_deviation)
+
+from .components import ControllerCtx
+from .records import FLTrace, RoundRecord
+from .spec import DEVICE_SCALE, FederationSpec
+
+
+def _flatten_params(tree):
+    return jnp.concatenate([x.reshape(x.shape[0], -1)
+                            for x in jax.tree.leaves(tree)], axis=1)
+
+
+class DeviceScaleEngine:
+    """Discrete-event asynchronous clustered FL over a device fleet."""
+
+    def __init__(self, spec: FederationSpec, data, parts, *,
+                 controller, aggregator, task):
+        assert spec.scale == DEVICE_SCALE
+        self.spec = spec
+        self.data = data
+        self.parts = parts
+        self.controller = controller
+        self.aggregator = aggregator
+        self.task = task
+
+        key = jax.random.PRNGKey(spec.seed)
+        (self.key, kt, kd, kc, kp, km) = jax.random.split(key, 6)
+        self.twins = sample_deviation(
+            kd, init_twins(kt, spec.fleet.n_devices), spec.fleet.dt_max_dev)
+        sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
+        self.twins = self.twins._replace(data_size=sizes)
+        self.assign, _ = cluster_devices(kc, self.twins,
+                                         spec.clustering.n_clusters)
+        self.assign = np.asarray(self.assign)
+        self.global_params = task.init(kp, dim=data.x.shape[1])
+        self.cluster_params = [self.global_params] * spec.clustering.n_clusters
+        self.cluster_ts = np.zeros(spec.clustering.n_clusters)
+        self.round = 0
+        self.rep = jnp.ones((spec.fleet.n_devices,))
+        self.channel = jnp.zeros((spec.fleet.n_devices,), jnp.int32)
+        self.malicious = np.zeros(spec.fleet.n_devices, bool)
+        n_mal = int(spec.fleet.malicious_frac * spec.fleet.n_devices)
+        if n_mal:
+            self.malicious[np.asarray(jax.random.choice(
+                km, spec.fleet.n_devices, (n_mal,), replace=False))] = True
+        self.energy_used = 0.0
+        self.agg_count = 0
+
+    # ---------------------------------------------------------------- #
+    def _cluster_freq(self, c: int) -> float:
+        members = np.where(self.assign == c)[0]
+        f = np.asarray(calibrated_freq(self.twins))[members]
+        return float(f.min()) if len(members) else 1.0
+
+    def _obs(self, c: int) -> jnp.ndarray:
+        """DQN observation (§IV-B layout, envs.OBS_DIM)."""
+        from repro.core.envs import OBS_DIM
+        members = self.assign == c
+        loss = float(np.nan_to_num(
+            np.asarray(self.twins.loss)[members].mean(), posinf=2.3))
+        tau = float(self.task.hidden_mean(self.cluster_params[c],
+                                          self.data.x[:256]))
+        ch = np.asarray(jax.nn.one_hot(self.channel, 3).mean(0))
+        feats = np.concatenate([
+            [loss, 2.3 - loss, self.energy_used, self.round / 100.0, tau],
+            np.eye(10)[min(9, self.agg_count % 10)], ch,
+            [float(calibrated_freq(self.twins)[members].mean()), 0.0, 0.0]])
+        return jnp.asarray(np.pad(feats, (0, OBS_DIM - len(feats))),
+                           jnp.float32)
+
+    def _ctx(self, c: int) -> ControllerCtx:
+        members = self.assign == c
+        loss = float(np.nan_to_num(
+            np.asarray(self.twins.loss)[members].mean(), posinf=2.3))
+        ch = np.asarray(self.channel)[members]
+        return ControllerCtx(
+            round=self.round, cluster=c, obs=lambda: self._obs(c),
+            cluster_loss=loss, cluster_freq=self._cluster_freq(c),
+            mean_freq=float(calibrated_freq(self.twins)[members].mean()),
+            channel_good_frac=float((ch == 0).mean()) if len(ch) else 1.0,
+            energy_used=self.energy_used)
+
+    def _pick_frequency(self, c: int) -> int:
+        """Controller choice capped by the Alg.-2 tolerance bound."""
+        spec = self.spec
+        a = self.controller.select(self._ctx(c))
+        t_min = min(1.0 / max(self._cluster_freq(cc), 1e-6)
+                    for cc in range(spec.clustering.n_clusters))
+        alpha = min(1.0, spec.clustering.alpha0 +
+                    spec.clustering.alpha_growth * self.round)
+        a = int(tolerance_bound(jnp.asarray(a), jnp.asarray(
+            self._cluster_freq(c)), jnp.asarray(t_min), alpha))
+        return max(1, min(a, self.controller.n_actions))
+
+    # ---------------------------------------------------------------- #
+    def _cluster_round(self, c: int, a: int, kround):
+        """One asynchronous cluster round: local training on every member,
+        pluggable intra-cluster aggregation.  Returns sim duration."""
+        spec = self.spec
+        members = np.where(self.assign == c)[0]
+        kb, ke, kc2 = jax.random.split(kround, 3)
+
+        # --- local batches (possibly label-flipped for malicious nodes)
+        xs, ys = [], []
+        for m in members:
+            ix = self.parts[m]
+            sel = np.asarray(jax.random.choice(
+                jax.random.fold_in(kb, int(m)), jnp.asarray(ix),
+                (spec.local_batch,), replace=len(ix) < spec.local_batch))
+            y = np.asarray(self.data.y)[sel]
+            if self.malicious[m]:
+                y = self.task.corrupt_labels(y)        # Byzantine label flip
+            xs.append(np.asarray(self.data.x)[sel])
+            ys.append(y)
+        batch = {"x": jnp.asarray(np.stack(xs)),
+                 "y": jnp.asarray(np.stack(ys))}
+
+        # --- a local steps on every member (vmap), from the cluster model
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(members),) + x.shape),
+            self.cluster_params[c])
+        new = self.task.local_train(stacked, batch, spec.lr, a)
+
+        # --- trust update (Eqns 4-5) & pluggable aggregation (Eqn 6)
+        upd_flat = _flatten_params(new) - _flatten_params(stacked)
+        q = learning_quality(upd_flat)
+        div = gradient_diversity(upd_flat)
+        tw_m = jax.tree.map(lambda x: x[members], self.twins._asdict())
+        twins_m = TwinState(**tw_m)
+        b = belief(twins_m, q, spec.channel.pkt_fail, div)
+        rep_m = update_reputation(self.rep[members], b,
+                                  spec.channel.pkt_fail, spec.iota)
+        self.rep = self.rep.at[jnp.asarray(members)].set(rep_m)
+        w = trust_weights(rep_m)
+        agg = self.aggregator(new, w)
+        if spec.privacy.clip > 0.0:
+            from repro.core.privacy import dp_aggregate
+            self.key, kdp = jax.random.split(self.key)
+            uniform = jnp.full((len(members),), 1.0 / len(members))
+            agg = dp_aggregate(
+                kdp, new, self.cluster_params[c],
+                w if spec.aggregator.kind == "trust" else uniform,
+                spec.privacy.clip, spec.privacy.noise)
+        self.cluster_params[c] = agg
+
+        # --- losses, energy, twins
+        losses = self.task.losses(new, batch)
+        e_cmp = a * compute_energy(
+            (self.twins.freq + self.twins.freq_dev)[members])
+        e_com = comm_energy(self.channel[members], ke)
+        consumed = float(e_cmp.sum() + e_com.sum())
+        self.energy_used += consumed
+        full_loss = self.twins.loss.at[jnp.asarray(members)].set(losses)
+        full_e = jnp.zeros_like(self.twins.energy).at[
+            jnp.asarray(members)].set(e_cmp + e_com)
+        self.twins = observe_round(
+            self.twins, full_loss, full_e,
+            jnp.asarray(self.malicious, jnp.float32))
+        if spec.fleet.calibrate_dt:
+            self.twins = calibrate(self.twins)
+        self.channel = step_channel(kc2, self.channel,
+                                    channel_transition(spec.channel.p_good))
+        self.controller.observe(None, consumed,
+                                float(np.asarray(losses).mean()))
+        return float(a) / max(self._cluster_freq(c), 1e-6)
+
+    def _global_aggregate(self):
+        """Eqn 19 via the one shared staleness-weighting implementation."""
+        staleness = jnp.asarray(self.round - self.cluster_ts, jnp.float32)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *self.cluster_params)
+        self.global_params, _ = time_weighted_average(stacked, staleness)
+        self.agg_count += 1
+
+    # ---------------------------------------------------------------- #
+    def run(self, eval_every: float = 1.0) -> FLTrace:
+        spec = self.spec
+        trace = FLTrace()
+        events = [(0.0, c) for c in range(spec.clustering.n_clusters)]
+        heapq.heapify(events)
+        t = 0.0
+        next_eval = 0.0
+        while events and t < spec.sim_seconds:
+            t, c = heapq.heappop(events)
+            if t >= spec.sim_seconds:
+                break
+            self.key, ka, kr = jax.random.split(self.key, 3)
+            a = self._pick_frequency(c)
+            dur = self._cluster_round(c, a, kr)
+            self.round += 1
+            self.cluster_ts[c] = self.round
+            self._global_aggregate()
+            # redistribute global model to the cluster (async pull)
+            self.cluster_params[c] = self.global_params
+            heapq.heappush(events, (t + dur, c))
+            if t >= next_eval:
+                m = self.task.evaluate(self.global_params, self.data)
+                trace.append(RoundRecord(
+                    t=t, round=self.round, cluster=c, a=a,
+                    loss=m["loss"], acc=m.get("acc"),
+                    energy=self.energy_used, agg_count=self.agg_count))
+                next_eval = t + eval_every
+        return trace
+
+
+class DatacenterEngine:
+    """Sharded fl_step (mode A/B) under the unified spec + trace schema.
+
+    A smoke-scale driver of the datacenter path: the controller picks a_i
+    per round exactly as at device scale (one pseudo-cluster ctx), trust
+    reputations feed Eqn 6 inside the jit-ed step, staleness is zero
+    (synchronous pods) unless the spec says otherwise.
+    """
+
+    def __init__(self, spec: FederationSpec, *, controller, task):
+        from repro.core import fl_step
+        from repro.optim import adam
+        self.spec = spec
+        self.controller = controller
+        self.task = task
+        self.n_clusters = spec.clustering.n_clusters
+        self.clients = max(1, spec.fleet.n_devices // self.n_clusters)
+        self.opt = adam(task.lr)
+        init = fl_step.build_init_fn(
+            task.cfg, self.opt, mode=task.mode,
+            n_clusters=self.n_clusters, clients_per_cluster=self.clients)
+        self.key = jax.random.PRNGKey(spec.seed)
+        self.state = init(self.key)
+        self.rep = jnp.ones((self.n_clusters, self.clients))
+        self._steps = {}
+        self._fl = fl_step
+
+    def _step(self, a: int):
+        if a not in self._steps:
+            self._steps[a] = jax.jit(self._fl.build_train_step(
+                self.task.cfg, self.opt, mode=self.task.mode, local_steps=a))
+        return self._steps[a]
+
+    def run(self, eval_every: float = 1.0) -> FLTrace:
+        del eval_every                      # every round is recorded
+        from repro.core.envs import OBS_DIM
+        spec = self.spec
+        trace = FLTrace()
+        loss = float("nan")
+        for i in range(spec.rounds):
+            self.key, kb = jax.random.split(self.key)
+            obs_feats = jnp.asarray([0.0 if np.isnan(loss) else loss,
+                                     i / max(spec.rounds, 1), 0.0])
+            ctx = ControllerCtx(
+                round=i, cluster=0,
+                obs=lambda f=obs_feats: jnp.pad(f, (0, OBS_DIM - 3)),
+                cluster_loss=0.0 if np.isnan(loss) else loss,
+                cluster_freq=1.0, mean_freq=1.0, channel_good_frac=1.0,
+                energy_used=0.0)
+            a = max(1, min(self.controller.select(ctx),
+                           self.controller.n_actions))
+            batch = self.task.make_batch(kb, self.n_clusters, self.clients)
+            stale = jnp.zeros((self.n_clusters,))
+            self.state, metrics = self._step(a)(
+                self.state, batch, self.rep, stale)
+            loss = float(jnp.mean(metrics["loss"]))
+            # no energy model at datacenter scale: report zero consumption
+            # (a raw step count would corrupt a Lyapunov queue's units)
+            self.controller.observe(ctx, 0.0, loss)
+            trace.append(RoundRecord(
+                t=float(i), round=i + 1, cluster=-1, a=a, loss=loss,
+                acc=None, energy=0.0, agg_count=i + 1))
+        return trace

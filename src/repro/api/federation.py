@@ -1,0 +1,81 @@
+"""`Federation`: the single public entry point of the repro.
+
+    from repro.api import Federation, FederationSpec
+
+    spec = FederationSpec(...)               # or FederationSpec.from_dict(...)
+    trace = Federation.from_spec(spec).run()
+
+Component instances built from the registries can be overridden with live
+objects (e.g. a DQN agent you trained yourself) via keyword arguments.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import registry
+from .records import FLTrace
+from .spec import DATACENTER_SCALE, DEVICE_SCALE, FederationSpec
+
+
+class Federation:
+    """Facade tying spec -> components -> engine -> trace."""
+
+    def __init__(self, spec: FederationSpec, *, data=None, parts=None,
+                 controller=None, aggregator=None, task=None):
+        spec.validate()
+        self.spec = spec
+        self.controller = controller or registry.CONTROLLERS.get(
+            spec.controller.kind)(spec.controller.params)
+        params = dict(spec.aggregator.params)
+        if spec.scale == DEVICE_SCALE:
+            params.setdefault("use_kernel", spec.aggregator.use_kernel)
+        self.aggregator = aggregator or registry.AGGREGATORS.get(
+            spec.aggregator.kind)(params)
+        self.task = task or registry.TASKS.get(spec.task.kind)(
+            spec.task.params)
+
+        if spec.scale == DEVICE_SCALE:
+            from .engine import DeviceScaleEngine
+            if data is None or parts is None:
+                data, parts = _default_device_data(spec)
+            self.engine = DeviceScaleEngine(
+                spec, data, parts, controller=self.controller,
+                aggregator=self.aggregator, task=self.task)
+        elif spec.scale == DATACENTER_SCALE:
+            from .engine import DatacenterEngine
+            self.engine = DatacenterEngine(
+                spec, controller=self.controller, task=self.task)
+        else:
+            raise ValueError(spec.scale)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_spec(cls, spec: FederationSpec, **kw) -> "Federation":
+        return cls(spec, **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict, **kw) -> "Federation":
+        return cls(FederationSpec.from_dict(d), **kw)
+
+    def run(self, eval_every: float = 1.0) -> FLTrace:
+        return self.engine.run(eval_every=eval_every)
+
+    # convenience passthroughs (device scale) -------------------------- #
+    def __getattr__(self, name):
+        if name == "engine":                 # not yet set: avoid recursion
+            raise AttributeError(name)
+        return getattr(self.engine, name)
+
+
+def _default_device_data(spec: FederationSpec):
+    """Synthetic non-IID federated data from the task params."""
+    from repro.data import dirichlet_partition, make_classification
+    p = spec.task.params
+    key = jax.random.PRNGKey(spec.seed)
+    data = make_classification(key, n=p.get("n_samples", 4096),
+                               dim=p.get("dim", 784))
+    parts = dirichlet_partition(key, data.y, spec.fleet.n_devices,
+                                alpha=p.get("dirichlet_alpha", 0.5))
+    return data, parts

@@ -1,0 +1,68 @@
+"""The one trace schema both execution scales emit.
+
+`RoundRecord` is a single evaluation point; `FLTrace` is the sequence plus
+the list-style views (`times`, `accs`, ...) that the legacy
+``core.async_fl.FLTrace`` exposed, so existing benchmark/plot code ports by
+attribute access alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    t: float                    # simulated seconds (device) / round (lm)
+    round: int                  # global round counter
+    cluster: int                # cluster that triggered this record
+    a: int                      # local-update count a_i chosen that round
+    loss: float
+    acc: Optional[float]        # None for tasks without a notion of accuracy
+    energy: float               # cumulative simulated energy [J]
+    agg_count: int              # global aggregations so far
+
+
+@dataclasses.dataclass
+class FLTrace:
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+
+    def append(self, rec: RoundRecord):
+        self.records.append(rec)
+
+    # legacy list views ------------------------------------------------ #
+    @property
+    def times(self):
+        return [r.t for r in self.records]
+
+    @property
+    def accs(self):
+        return [r.acc for r in self.records]
+
+    @property
+    def losses(self):
+        return [r.loss for r in self.records]
+
+    @property
+    def energies(self):
+        return [r.energy for r in self.records]
+
+    @property
+    def agg_counts(self):
+        return [r.agg_count for r in self.records]
+
+    # ------------------------------------------------------------------ #
+    def to_dicts(self):
+        return [dataclasses.asdict(r) for r in self.records]
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dicts(), **kw)
+
+    def summary(self) -> dict:
+        if not self.records:
+            return {}
+        last = self.records[-1]
+        return {"final_loss": last.loss, "final_acc": last.acc,
+                "energy": last.energy, "aggregations": last.agg_count,
+                "rounds": last.round, "evals": len(self.records)}

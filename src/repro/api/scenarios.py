@@ -1,0 +1,73 @@
+"""Scenario presets: named `FederationSpec` builders.
+
+Imported by the package __init__ so `SCENARIOS` is populated on
+``import repro.api``; the CLI (`python -m repro.api.run`) resolves from the
+same registry, and downstream code can add presets with
+``@register_scenario("name")``.
+"""
+from __future__ import annotations
+
+from .registry import register_scenario
+from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
+                   ControllerSpec, DATACENTER_SCALE, FederationSpec,
+                   FleetSpec, PrivacySpec, TaskSpec)
+
+
+@register_scenario("sync-baseline")
+def _sync_baseline() -> FederationSpec:
+    """Benchmark scheme: synchronous FedAvg, one cluster, fixed a=5."""
+    return FederationSpec(
+        clustering=ClusteringSpec(n_clusters=1),
+        controller=ControllerSpec("fixed", {"a": 5}),
+        aggregator=AggregatorSpec("fedavg"),
+        sim_seconds=15.0)
+
+
+@register_scenario("byzantine")
+def _byzantine() -> FederationSpec:
+    """25% label-flipping clients; trust aggregation must down-weight them."""
+    return FederationSpec(
+        fleet=FleetSpec(n_devices=16, malicious_frac=0.25),
+        controller=ControllerSpec("fixed", {"a": 5}),
+        aggregator=AggregatorSpec("trust"),
+        sim_seconds=15.0)
+
+
+@register_scenario("dp")
+def _dp() -> FederationSpec:
+    """Client-level DP on top of trust aggregation."""
+    return FederationSpec(
+        controller=ControllerSpec("fixed", {"a": 5}),
+        privacy=PrivacySpec(clip=1.0, noise=0.5),
+        sim_seconds=15.0)
+
+
+@register_scenario("heterogeneous")
+def _heterogeneous() -> FederationSpec:
+    """Wide DT deviation + bad channel; Lyapunov-greedy frequency control."""
+    return FederationSpec(
+        fleet=FleetSpec(n_devices=16, dt_max_dev=0.4),
+        channel=ChannelSpec(p_good=0.3),
+        controller=ControllerSpec("lyapunov",
+                                  {"budget": 150.0, "horizon": 60}),
+        sim_seconds=15.0)
+
+
+@register_scenario("adaptive")
+def _adaptive() -> FederationSpec:
+    """The paper's full scheme: DQN trained on the DT env picks a_i."""
+    return FederationSpec(
+        controller=ControllerSpec("dqn", {"episodes": 3, "horizon": 20}),
+        sim_seconds=15.0)
+
+
+@register_scenario("lm-modeA")
+def _lm_mode_a() -> FederationSpec:
+    """Datacenter scale: tiny-LM FedAvg-replica (fl_step mode A)."""
+    return FederationSpec(
+        scale=DATACENTER_SCALE,
+        fleet=FleetSpec(n_devices=8),
+        clustering=ClusteringSpec(n_clusters=2),
+        controller=ControllerSpec("fixed", {"a": 2, "n_actions": 4}),
+        task=TaskSpec("lm", {"seq": 16, "micro_batch": 2}),
+        rounds=5)

@@ -1,0 +1,194 @@
+"""`FederationSpec`: the declarative description of a federation experiment.
+
+One dataclass tree covers both scales of the system — the device-scale
+discrete-event simulator (paper §IV-D) and the datacenter-scale sharded
+`fl_step` modes — so a scenario is data, not code.  `to_dict`/`from_dict`
+round-trip the tree through plain JSON-able dicts for config files;
+`from_dict` rejects unknown keys and `validate` rejects unknown component
+names against the registries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from . import registry
+
+DEVICE_SCALE = "device"          # discrete-event simulator over the MLP task
+DATACENTER_SCALE = "datacenter"  # sharded fl_step modes over the LM task
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """The device fleet and its digital twins (Eqns 1-2)."""
+    n_devices: int = 16
+    malicious_frac: float = 0.0      # Byzantine label-flippers
+    dt_max_dev: float = 0.2          # DT mapping error ~ U(0, max_dev)
+    calibrate_dt: bool = True        # Eqn-2 self-calibration on/off
+
+
+@dataclasses.dataclass
+class ClusteringSpec:
+    """K-means clustering + Alg.-2 tolerance bound."""
+    n_clusters: int = 4
+    alpha0: float = 0.5              # tolerance factor (grows with rounds)
+    alpha_growth: float = 0.02
+
+
+@dataclasses.dataclass
+class ControllerSpec:
+    """Aggregation-frequency controller: fixed | dqn | lyapunov."""
+    kind: str = "dqn"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class AggregatorSpec:
+    """Intra-cluster aggregation rule (Eqn 6 or a robust baseline)."""
+    kind: str = "trust"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    use_kernel: bool = True          # route through the Pallas kernel
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """Model/task adapter: mlp (device scale) | lm (datacenter scale)."""
+    kind: str = "mlp"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PrivacySpec:
+    """Client-level DP on aggregated deltas; clip <= 0 disables."""
+    clip: float = 0.0
+    noise: float = 0.0
+
+
+@dataclasses.dataclass
+class ChannelSpec:
+    """Markov wireless channel + packet-failure probability (Eqn 4's u)."""
+    p_good: float = 0.5
+    pkt_fail: float = 0.05
+
+
+@dataclasses.dataclass
+class FederationSpec:
+    scale: str = DEVICE_SCALE
+    fleet: FleetSpec = dataclasses.field(default_factory=FleetSpec)
+    clustering: ClusteringSpec = dataclasses.field(
+        default_factory=ClusteringSpec)
+    controller: ControllerSpec = dataclasses.field(
+        default_factory=ControllerSpec)
+    aggregator: AggregatorSpec = dataclasses.field(
+        default_factory=AggregatorSpec)
+    task: TaskSpec = dataclasses.field(default_factory=TaskSpec)
+    privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
+    channel: ChannelSpec = dataclasses.field(default_factory=ChannelSpec)
+    sim_seconds: float = 60.0        # device scale: simulated wall-clock
+    rounds: int = 20                 # datacenter scale: global rounds
+    local_batch: int = 64
+    lr: float = 0.1
+    iota: float = 0.1                # Eqn 5 uncertainty coefficient
+    seed: int = 0
+
+    # ------------------------------------------------------------------ #
+    def validate(self) -> "FederationSpec":
+        if self.scale not in (DEVICE_SCALE, DATACENTER_SCALE):
+            raise ValueError(f"unknown scale {self.scale!r}")
+        registry.CONTROLLERS.get(self.controller.kind)
+        registry.AGGREGATORS.get(self.aggregator.kind)
+        registry.TASKS.get(self.task.kind)
+        # built-in tasks are scale-specific; custom registrations are not
+        # checked (they may support either engine protocol)
+        scale_of = {"mlp": DEVICE_SCALE, "lm": DATACENTER_SCALE}
+        want = scale_of.get(self.task.kind)
+        if want is not None and want != self.scale:
+            fit = "lm" if self.scale == DATACENTER_SCALE else "mlp"
+            raise ValueError(
+                f"task {self.task.kind!r} is {want}-scale but spec has "
+                f"scale={self.scale!r}; use task {fit!r}")
+        if self.scale == DATACENTER_SCALE:
+            # fl_step implements Eqn-6 trust weighting inside the jit-ed
+            # step; robust rules and DP have no datacenter implementation
+            # yet, so reject rather than silently run without them
+            if self.aggregator.kind not in ("trust", "fedavg"):
+                raise ValueError(
+                    f"aggregator {self.aggregator.kind!r} is not supported "
+                    "at datacenter scale (fl_step implements Eqn-6 trust "
+                    "weighting only)")
+            if self.privacy.clip > 0.0 or self.privacy.noise > 0.0:
+                raise ValueError(
+                    "privacy (DP) is not implemented at datacenter scale")
+        if self.fleet.n_devices < self.clustering.n_clusters:
+            raise ValueError("n_devices < n_clusters")
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FederationSpec":
+        return _from_dict(cls, d, path="spec")
+
+    def replace(self, **kw) -> "FederationSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def _from_dict(cls, d: Dict[str, Any], path: str):
+    """Recursive strict dataclass hydration: unknown keys are errors."""
+    if not isinstance(d, dict):
+        raise TypeError(f"{path}: expected dict, got {type(d).__name__}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = set(d) - set(fields)
+    if unknown:
+        raise KeyError(f"{path}: unknown keys {sorted(unknown)}; "
+                       f"valid: {sorted(fields)}")
+    kwargs = {}
+    for name, value in d.items():
+        nested = _NESTED.get((cls.__name__, name))
+        kwargs[name] = (_from_dict(nested, value, f"{path}.{name}")
+                        if nested else value)
+    return cls(**kwargs)
+
+
+_NESTED = {
+    ("FederationSpec", "fleet"): FleetSpec,
+    ("FederationSpec", "clustering"): ClusteringSpec,
+    ("FederationSpec", "controller"): ControllerSpec,
+    ("FederationSpec", "aggregator"): AggregatorSpec,
+    ("FederationSpec", "task"): TaskSpec,
+    ("FederationSpec", "privacy"): PrivacySpec,
+    ("FederationSpec", "channel"): ChannelSpec,
+}
+
+
+def legacy_spec(cfg) -> FederationSpec:
+    """Translate a legacy ``AsyncFLConfig`` into the equivalent spec.
+
+    Used by the `AsyncFederation` deprecation shim; the parity test asserts
+    the translation reproduces the legacy trace bit-for-bit.
+    """
+    if cfg.fixed_frequency is not None:
+        controller = ControllerSpec("fixed", {"a": int(cfg.fixed_frequency)})
+    else:
+        # legacy default without an agent: constant a=5; a trained agent is
+        # attached by the caller via Federation(..., controller=...)
+        controller = ControllerSpec("fixed", {"a": 5})
+    agg_kind = cfg.aggregator
+    return FederationSpec(
+        scale=DEVICE_SCALE,
+        fleet=FleetSpec(n_devices=cfg.n_devices,
+                        malicious_frac=cfg.malicious_frac,
+                        dt_max_dev=cfg.dt_max_dev,
+                        calibrate_dt=cfg.calibrate_dt),
+        clustering=ClusteringSpec(n_clusters=cfg.n_clusters,
+                                  alpha0=cfg.alpha0,
+                                  alpha_growth=cfg.alpha_growth),
+        controller=controller,
+        aggregator=AggregatorSpec(kind=agg_kind),
+        task=TaskSpec("mlp"),
+        privacy=PrivacySpec(clip=cfg.dp_clip, noise=cfg.dp_noise),
+        channel=ChannelSpec(p_good=cfg.p_good, pkt_fail=cfg.pkt_fail),
+        sim_seconds=cfg.sim_seconds,
+        local_batch=cfg.local_batch,
+        lr=cfg.lr, iota=cfg.iota, seed=cfg.seed)

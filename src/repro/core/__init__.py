@@ -7,15 +7,16 @@ lyapunov    dynamic deficit queue & drift-plus-penalty (Eqns 12-15)
 dqn         adaptive aggregation-frequency agent (Alg. 1, Eqns 16-18)
 envs        DT-simulated FL environment the agent trains in (§IV-C)
 clustering  K-means device clustering + tolerance bound (Alg. 2)
-async_fl    asynchronous clustered federation orchestrator (§IV-D)
+async_fl    legacy shims over the repro.api engine (§IV-D orchestrator)
 fl_step     distributed train/serve steps for the assigned architectures
 mlp         the paper's device-scale classifier
 """
 from .twin import TwinState, init_twins, sample_deviation, calibrate, \
     calibrated_freq, observe_round
 from .trust import (belief, gradient_diversity, learning_quality,
-                    time_weighted_average, trust_weighted_average,
-                    trust_weights, update_reputation)
+                    staleness_weights, time_weighted_average,
+                    trust_weighted_average, trust_weights,
+                    update_reputation)
 from .energy import ChannelParams, compute_energy, comm_energy, \
     channel_transition, step_channel
 from .lyapunov import DeficitQueue, init_queue, step_queue, \

@@ -1,37 +1,23 @@
-"""Clustering-based asynchronous federated learning (paper §IV-D, Alg. 2).
+"""Deprecation shims for the pre-`repro.api` entry points.
 
-Host-side discrete-event orchestrator over the jit-ed FL steps:
+The discrete-event orchestrator that used to live here (paper §IV-D, Alg. 2)
+is now `repro.api.engine.DeviceScaleEngine`, with its policy choices
+(aggregation rule, frequency controller, task, privacy) pluggable through
+the `repro.api` registries.  `AsyncFederation` and `run_sync_baseline`
+remain as thin wrappers that translate the legacy `AsyncFLConfig` into a
+`FederationSpec` and delegate, so both entry points produce identical
+traces at the same seed (tests/test_api.py proves the translation is
+faithful).  New code should use:
 
-  Step 1  K-means clustering of devices by (data size, compute power);
-  Step 2  per-cluster aggregation frequency a_i from the trained DQN, capped
-          by the tolerance bound a_i f_i <= alpha T_m (Alg. 2 lines 4-6);
-  Step 3  intra-cluster trust-weighted aggregation (Eqn 6);
-  Step 4  inter-cluster time-weighted aggregation (Eqn 19).
-
-Wall-clock is *simulated*: a cluster's round takes a_i / f_min(cluster)
-simulated seconds (its straggler), so clusters aggregate asynchronously —
-exactly the straggler-elimination mechanism of the paper.  The synchronous
-fixed-frequency baseline (`run_sync_baseline`) is the benchmark scheme.
+    from repro.api import Federation, FederationSpec
+    trace = Federation.from_spec(FederationSpec(...)).run()
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import List, Optional
 
 from . import dqn as dqn_lib
-from .clustering import cluster_devices, tolerance_bound
-from .energy import (ChannelParams, channel_transition, comm_energy,
-                     compute_energy, step_channel)
-from .mlp import accuracy, classifier_loss, init_mlp_classifier, mlp_hidden_mean
-from .trust import (belief, gradient_diversity, learning_quality,
-                    trust_weights, trust_weighted_average, update_reputation)
-from .twin import (TwinState, calibrate, calibrated_freq, init_twins,
-                   observe_round, sample_deviation)
 
 
 @dataclasses.dataclass
@@ -59,6 +45,7 @@ class AsyncFLConfig:
 
 @dataclasses.dataclass
 class FLTrace:
+    """Legacy list-style trace (see repro.api.records for the new schema)."""
     times: List[float]
     accs: List[float]
     losses: List[float]
@@ -66,213 +53,40 @@ class FLTrace:
     agg_counts: List[int]
 
 
-def _client_sgd(params, batch, lr, steps):
-    def one(_, p):
-        g = jax.grad(classifier_loss)(p, batch)
-        return jax.tree.map(lambda a, b: a - lr * b, p, g)
-    return jax.lax.fori_loop(0, steps, one, params)
-
-
-_client_sgd_v = jax.jit(jax.vmap(_client_sgd, in_axes=(0, 0, None, None)),
-                        static_argnums=3)
-
-
-def _flatten_params(tree):
-    return jnp.concatenate([x.reshape(x.shape[0], -1)
-                            for x in jax.tree.leaves(tree)], axis=1)
-
-
 class AsyncFederation:
-    """Discrete-event asynchronous clustered FL on the paper's device-scale
-    task.  ``agent`` (trained DQN) picks per-cluster frequencies; pass
-    ``cfg.fixed_frequency`` for the benchmark scheme instead."""
+    """Deprecated: use ``repro.api.Federation``.  Thin wrapper over
+    `DeviceScaleEngine`; ``agent`` (trained DQN) picks per-cluster
+    frequencies, ``cfg.fixed_frequency`` selects the benchmark scheme."""
 
     def __init__(self, cfg: AsyncFLConfig, data, parts,
                  agent: Optional[dqn_lib.DQNState] = None,
                  dqn_cfg: Optional[dqn_lib.DQNConfig] = None):
+        from repro.api import Federation, legacy_spec
+        from repro.api.components import DQNController, FixedController
         self.cfg = cfg
-        self.data = data
-        self.parts = parts
-        self.agent = agent
         self.dqn_cfg = dqn_cfg or dqn_lib.DQNConfig()
-        key = jax.random.PRNGKey(cfg.seed)
-        (self.key, kt, kd, kc, kp, km) = jax.random.split(key, 6)
-        self.twins = sample_deviation(
-            kd, init_twins(kt, cfg.n_devices), cfg.dt_max_dev)
-        sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
-        self.twins = self.twins._replace(data_size=sizes)
-        self.assign, _ = cluster_devices(kc, self.twins, cfg.n_clusters)
-        self.assign = np.asarray(self.assign)
-        self.global_params = init_mlp_classifier(kp, dim=data.x.shape[1])
-        self.cluster_params = [self.global_params] * cfg.n_clusters
-        self.cluster_ts = np.zeros(cfg.n_clusters)      # timestamps (rounds)
-        self.round = 0
-        self.rep = jnp.ones((cfg.n_devices,))
-        self.channel = jnp.zeros((cfg.n_devices,), jnp.int32)
-        self.malicious = np.zeros(cfg.n_devices, bool)
-        n_mal = int(cfg.malicious_frac * cfg.n_devices)
-        if n_mal:
-            self.malicious[np.asarray(
-                jax.random.choice(km, cfg.n_devices, (n_mal,), replace=False))] = True
-        self.energy_used = 0.0
-        self.agg_count = 0
-
-    # ---------------------------------------------------------------- #
-    def _cluster_freq(self, c: int) -> float:
-        members = np.where(self.assign == c)[0]
-        f = np.asarray(calibrated_freq(self.twins))[members]
-        return float(f.min()) if len(members) else 1.0
-
-    def _pick_frequency(self, c: int, obs) -> int:
-        if self.cfg.fixed_frequency is not None:
-            a = self.cfg.fixed_frequency
-        elif self.agent is not None:
-            q = dqn_lib.q_values(self.agent.eval_params, obs)
-            a = int(jnp.argmax(q)) + 1
+        spec = legacy_spec(cfg)
+        if cfg.fixed_frequency is not None:
+            controller = FixedController(cfg.fixed_frequency,
+                                         n_actions=self.dqn_cfg.n_actions)
+        elif agent is not None:
+            controller = DQNController(agent, self.dqn_cfg)
         else:
-            a = 5
-        # Alg. 2 tolerance bound
-        t_min = min(1.0 / max(self._cluster_freq(cc), 1e-6)
-                    for cc in range(self.cfg.n_clusters))
-        alpha = min(1.0, self.cfg.alpha0 +
-                    self.cfg.alpha_growth * self.round)
-        a = int(tolerance_bound(jnp.asarray(a), jnp.asarray(
-            self._cluster_freq(c)), jnp.asarray(t_min), alpha))
-        return max(1, min(a, self.dqn_cfg.n_actions))
+            controller = FixedController(5, n_actions=self.dqn_cfg.n_actions)
+        self.agent = agent
+        self._fed = Federation.from_spec(spec, data=data, parts=parts,
+                                         controller=controller)
 
-    def _obs(self, c: int) -> jnp.ndarray:
-        from .envs import OBS_DIM
-        members = self.assign == c
-        loss = float(np.nan_to_num(np.asarray(self.twins.loss)[members].mean(),
-                                   posinf=2.3))
-        tau = float(mlp_hidden_mean(self.cluster_params[c],
-                                    self.data.x[:256]))
-        ch = np.asarray(jax.nn.one_hot(self.channel, 3).mean(0))
-        feats = np.concatenate([
-            [loss, 2.3 - loss, self.energy_used, self.round / 100.0, tau],
-            np.eye(10)[min(9, self.agg_count % 10)], ch,
-            [float(calibrated_freq(self.twins)[members].mean()), 0.0, 0.0]])
-        return jnp.asarray(np.pad(feats, (0, OBS_DIM - len(feats))),
-                           jnp.float32)
-
-    # ---------------------------------------------------------------- #
-    def _cluster_round(self, c: int, a: int, kround):
-        """One asynchronous cluster round: local training on every member,
-        trust-weighted intra-cluster aggregation.  Returns sim duration."""
-        cfg = self.cfg
-        members = np.where(self.assign == c)[0]
-        kb, ke, kc2 = jax.random.split(kround, 3)
-
-        # --- local batches (possibly label-flipped for malicious nodes)
-        xs, ys = [], []
-        for m in members:
-            ix = self.parts[m]
-            sel = np.asarray(jax.random.choice(
-                jax.random.fold_in(kb, int(m)), jnp.asarray(ix),
-                (cfg.local_batch,), replace=len(ix) < cfg.local_batch))
-            y = np.asarray(self.data.y)[sel]
-            if self.malicious[m]:
-                y = (y + 1) % 10                       # Byzantine label flip
-            xs.append(np.asarray(self.data.x)[sel])
-            ys.append(y)
-        batch = {"x": jnp.asarray(np.stack(xs)),
-                 "y": jnp.asarray(np.stack(ys))}
-
-        # --- a local steps on every member (vmap), from the cluster model
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(members),) + x.shape),
-            self.cluster_params[c])
-        new = _client_sgd_v(stacked, batch, cfg.lr, a)
-
-        # --- trust update (Eqns 4-5) & weighted aggregation (Eqn 6)
-        upd_flat = _flatten_params(new) - _flatten_params(stacked)
-        q = learning_quality(upd_flat)
-        div = gradient_diversity(upd_flat)
-        tw_m = jax.tree.map(lambda x: x[members], self.twins._asdict())
-        twins_m = TwinState(**tw_m)
-        b = belief(twins_m, q, self.cfg.pkt_fail, div)
-        rep_m = update_reputation(self.rep[members], b, cfg.pkt_fail, cfg.iota)
-        self.rep = self.rep.at[jnp.asarray(members)].set(rep_m)
-        w = trust_weights(rep_m)
-        if cfg.aggregator == "trust":
-            agg = trust_weighted_average(new, w)
-        elif cfg.aggregator == "fedavg":
-            agg = trust_weighted_average(
-                new, jnp.full_like(w, 1.0 / len(members)))
-        else:
-            from .robust import AGGREGATORS
-            agg = AGGREGATORS[cfg.aggregator](new)
-        if cfg.dp_clip > 0.0:
-            from .privacy import dp_aggregate
-            self.key, kdp = jax.random.split(self.key)
-            uniform = jnp.full((len(members),), 1.0 / len(members))
-            agg = dp_aggregate(
-                kdp, new, self.cluster_params[c],
-                w if cfg.aggregator == "trust" else uniform,
-                cfg.dp_clip, cfg.dp_noise)
-        self.cluster_params[c] = agg
-
-        # --- losses, energy, twins
-        losses = jax.vmap(classifier_loss, in_axes=(0, 0))(new, batch)
-        e_cmp = a * compute_energy(
-            (self.twins.freq + self.twins.freq_dev)[members])
-        e_com = comm_energy(self.channel[members], ke)
-        self.energy_used += float(e_cmp.sum() + e_com.sum())
-        full_loss = self.twins.loss.at[jnp.asarray(members)].set(losses)
-        full_e = jnp.zeros_like(self.twins.energy).at[
-            jnp.asarray(members)].set(e_cmp + e_com)
-        self.twins = observe_round(
-            self.twins, full_loss, full_e,
-            jnp.asarray(self.malicious, jnp.float32))
-        if cfg.calibrate_dt:
-            self.twins = calibrate(self.twins)
-        self.channel = step_channel(kc2, self.channel,
-                                    channel_transition(cfg.p_good))
-        return float(a) / max(self._cluster_freq(c), 1e-6)
-
-    def _global_aggregate(self):
-        """Eqn 19: time-weighted aggregation across clusters."""
-        staleness = jnp.asarray(self.round - self.cluster_ts, jnp.float32)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *self.cluster_params)
-        w = (jnp.e / 2.0) ** (-staleness)
-        w = w / w.sum()
-        self.global_params = trust_weighted_average(stacked, w)
-        self.agg_count += 1
-
-    # ---------------------------------------------------------------- #
     def run(self, eval_every: float = 1.0) -> FLTrace:
-        cfg = self.cfg
-        trace = FLTrace([], [], [], [], [])
-        events = [(0.0, c) for c in range(cfg.n_clusters)]
-        heapq.heapify(events)
-        t = 0.0
-        next_eval = 0.0
-        while events and t < cfg.sim_seconds:
-            t, c = heapq.heappop(events)
-            if t >= cfg.sim_seconds:
-                break
-            self.key, ka, kr = jax.random.split(self.key, 3)
-            a = self._pick_frequency(c, self._obs(c))
-            dur = self._cluster_round(c, a, kr)
-            self.round += 1
-            self.cluster_ts[c] = self.round
-            self._global_aggregate()
-            # redistribute global model to the cluster (async pull)
-            self.cluster_params[c] = self.global_params
-            heapq.heappush(events, (t + dur, c))
-            if t >= next_eval:
-                acc = float(accuracy(self.global_params,
-                                     self.data.x, self.data.y))
-                loss = float(classifier_loss(
-                    self.global_params,
-                    {"x": self.data.x[:1024], "y": self.data.y[:1024]}))
-                trace.times.append(t)
-                trace.accs.append(acc)
-                trace.losses.append(loss)
-                trace.energies.append(self.energy_used)
-                trace.agg_counts.append(self.agg_count)
-                next_eval = t + eval_every
-        return trace
+        trace = self._fed.run(eval_every=eval_every)
+        return FLTrace(times=trace.times, accs=trace.accs,
+                       losses=trace.losses, energies=trace.energies,
+                       agg_counts=trace.agg_counts)
+
+    def __getattr__(self, name):
+        if name == "_fed":                   # not yet set: avoid recursion
+            raise AttributeError(name)
+        return getattr(self._fed.engine, name)
 
 
 def run_sync_baseline(cfg: AsyncFLConfig, data, parts) -> FLTrace:

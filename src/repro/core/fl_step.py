@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from ..models import (ArchConfig, decode_step, init_params, lm_loss,
                       param_specs, weighted_lm_loss)
 from ..optim import Optimizer, apply_updates
+from .trust import staleness_weights
 
 MODE_A = "fedavg_replica"
 MODE_B = "trust_fsdp"
@@ -59,8 +60,7 @@ def intra_cluster_agg(params, w):
 
 def inter_cluster_agg(params, staleness):
     """Eqn 19 over the cluster dim. leaves (NC, ...); staleness (NC,)."""
-    w = (jnp.e / 2.0) ** (-staleness.astype(jnp.float32))
-    w = w / (jnp.sum(w) + 1e-8)
+    w = staleness_weights(staleness)
     def agg(x):
         return jnp.einsum("n...,n->...", x, w.astype(x.dtype))
     return jax.tree.map(agg, params)

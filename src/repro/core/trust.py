@@ -54,10 +54,15 @@ def gradient_diversity(updates_flat: jnp.ndarray) -> jnp.ndarray:
 
 def belief(twins: TwinState, quality, pkt_fail, diversity=None) -> jnp.ndarray:
     """Eqn 4 with the DT deviation in the denominator (deviation-normalized
-    belief) and the subjective-logic interaction ratio."""
-    fdev = jnp.maximum(jnp.abs(twins.freq_dev - twins.dev_estimate), 1e-3)
+    belief) and the subjective-logic interaction ratio.
+
+    The deviation term is 1/(1 + f̂): monotonically down-weighting badly
+    mapped twins while keeping b <= quality * inter.  (A raw 1/f̂ amplifies
+    belief ~1000x for whichever device's twin happens to calibrate best,
+    swamping the honesty signals — found by the Byzantine seed test.)"""
+    fdev = jnp.abs(twins.freq_dev - twins.dev_estimate)
     inter = twins.alpha / (twins.alpha + twins.beta + _EPS)
-    b = (1.0 - pkt_fail) * quality / fdev * inter
+    b = (1.0 - pkt_fail) * quality / (1.0 + fdev) * inter
     if diversity is not None:
         b = b * diversity
     return b
@@ -91,13 +96,25 @@ def trust_weighted_average(client_params, weights):
     return jax.tree.map(wavg, client_params)
 
 
+def staleness_weights(staleness, base: float = jnp.e / 2) -> jnp.ndarray:
+    """Eqn 19's normalized time-decay weights (e/2)^{-(t - timestamp_j)}.
+
+    The single implementation shared by every Eqn-19 call site
+    (`time_weighted_average`, `fl_step.inter_cluster_agg`, the
+    `repro.api` engine's global aggregate).
+
+    staleness: (n_clusters,) = t - timestamp_j  (rounds since last update)
+    -> (n_clusters,) weights summing to 1.
+    """
+    w = base ** (-staleness.astype(jnp.float32))
+    return w / (jnp.sum(w) + _EPS)
+
+
 def time_weighted_average(cluster_params, staleness, base: float = jnp.e / 2):
-    """Eqn 19: inter-cluster aggregation with exponential time decay
-    (e/2)^{-(t - timestamp_j)}, normalized over clusters.
+    """Eqn 19: inter-cluster aggregation with exponential time decay.
 
     cluster_params: pytree with leaves (n_clusters, ...)
     staleness: (n_clusters,) = t - timestamp_j  (rounds since last update)
     """
-    w = base ** (-staleness.astype(jnp.float32))
-    w = w / (jnp.sum(w) + _EPS)
+    w = staleness_weights(staleness, base)
     return trust_weighted_average(cluster_params, w), w

@@ -1,0 +1,11 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax 0.4.x exposes ``pltpu.TPUCompilerParams``; newer releases renamed it to
+``pltpu.CompilerParams``.  Resolve once here so every kernel works on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(xc_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref, h_ref, *,
             seq_len: int):
@@ -70,7 +72,7 @@ def selective_scan(xc, dt, Bc, Cc, A, *, bd: int = 512,
             jax.ShapeDtypeStruct((B, Di, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xc, dt, Bc, Cc, A)

@@ -5,7 +5,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
 from repro.data import (dirichlet_partition, federated_batches, lm_batches,

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import energy, lyapunov
 
