@@ -23,4 +23,7 @@ python -m repro.api.run --scenario byzantine --sim-seconds 4 \
     --devices 8 --clusters 2 --eval-every 2
 python -m repro.api.run --scenario lm-modeA --rounds 2
 
+echo "== engine throughput (fused FleetState round vs reference, fast) =="
+python benchmarks/engine_bench.py --fast
+
 echo "smoke OK"

@@ -19,6 +19,7 @@ Legacy entry points (`repro.core.AsyncFederation`, `run_sync_baseline`,
 from .components import (ControllerCtx, DQNController, FixedController,
                          LMTask, LyapunovGreedyController, MLPTask,
                          RobustAggregator, WeightedAggregator)
+from .engine import FleetState
 from .federation import Federation
 from .records import FLTrace, RoundRecord
 from .registry import (AGGREGATORS, CONTROLLERS, SCENARIOS, TASKS,
@@ -31,7 +32,7 @@ from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
 from . import scenarios  # noqa: F401  (populates SCENARIOS presets)
 
 __all__ = [
-    "Federation", "FederationSpec", "FLTrace", "RoundRecord",
+    "Federation", "FederationSpec", "FleetState", "FLTrace", "RoundRecord",
     "FleetSpec", "ClusteringSpec", "ControllerSpec", "AggregatorSpec",
     "TaskSpec", "PrivacySpec", "ChannelSpec", "legacy_spec",
     "DEVICE_SCALE", "DATACENTER_SCALE",

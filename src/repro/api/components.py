@@ -1,14 +1,27 @@
 """Pluggable federation components and their registry entries.
 
-Three component protocols, all duck-typed:
+Three component protocols, all duck-typed — and all **jit-safe**: the fused
+`FleetState` round traces aggregator and task calls into one compiled
+program, so their bodies must be pure jnp (no host syncs, no Python control
+flow on traced values).
 
-Aggregator        ``__call__(client_params, weights) -> aggregated pytree``
-                  (client_params leaves carry a leading client dim)
+Aggregator        ``__call__(client_params, weights, mask=None) -> pytree``
+                  (client_params leaves carry a leading client dim).  Class
+                  attr ``supports_mask``: True means the rule understands a
+                  (C,) validity mask and the engine may run it on *padded*
+                  fixed-shape clusters sharing one compiled round; False
+                  (the default for third-party callables) makes the engine
+                  compile one exact-shape round per cluster size instead.
 FrequencyController
                   ``select(ctx) -> int`` raw a_i before the Alg.-2 tolerance
-                  bound; optional ``observe(ctx, consumed, loss)`` feedback
-                  hook after the round; ``n_actions`` caps a_i.
+                  bound (applied *inside* the jitted round); optional
+                  ``observe(ctx, consumed, loss)`` feedback hook after the
+                  round; ``n_actions`` caps a_i.  Class attr ``needs_ctx``:
+                  False lets the engine skip materializing the host-side
+                  `ControllerCtx` (device->host syncs) each round.
 TaskAdapter       model/task plug: init / loss / local training / metrics.
+                  ``local_train`` must accept a *traced* step count (the
+                  tolerance bound is computed inside jit).
 
 Registration makes every paper mechanism (trust Eqn 6, robust baselines,
 DQN Alg. 1, Lyapunov Eqn 12-15) a named choice in `FederationSpec`.
@@ -58,33 +71,50 @@ class ControllerCtx(NamedTuple):
 # --------------------------------------------------------------------- #
 class WeightedAggregator:
     """Trust/uniform weighted average; hot path through the Pallas
-    ``trust_aggregate`` kernel (interpret=True on CPU), jnp fallback."""
+    ``trust_aggregate`` kernel (interpret=True on CPU), jnp fallback.
+    Mask-aware: padded client rows carry zero weight, so ragged cluster
+    memberships run as one fixed-shape compiled round."""
+
+    supports_mask = True
 
     def __init__(self, uniform: bool = False, use_kernel: bool = True):
         self.uniform = uniform
         self.use_kernel = use_kernel
 
-    def __call__(self, client_params, weights):
+    def __call__(self, client_params, weights, mask=None):
         if self.uniform:
-            n = weights.shape[0]
-            weights = jnp.full_like(weights, 1.0 / n)
+            if mask is None:
+                n = weights.shape[0]
+                weights = jnp.full_like(weights, 1.0 / n)
+            else:
+                m = mask.astype(weights.dtype)
+                weights = m / jnp.maximum(jnp.sum(m), 1.0)
         if self.use_kernel:
-            return trust_aggregate_tree(client_params, weights,
+            return trust_aggregate_tree(client_params, weights, mask,
                                         interpret=INTERPRET)
+        if mask is not None:
+            weights = weights * mask.astype(weights.dtype)
         return trust_weighted_average(client_params, weights)
 
 
 class RobustAggregator:
     """Byzantine-robust rules from repro.core.robust; ignores trust weights
-    (that is their point: no reputation signal needed)."""
+    (that is their point: no reputation signal needed).  Rank statistics
+    (median, sorts) cannot ignore padded rows, so these rules run on
+    exact-shape clusters (supports_mask=False)."""
+
+    supports_mask = False
 
     def __init__(self, rule: str, **kw):
         self.rule_name = rule
         self._rule = ROBUST_RULES[rule]
         self._kw = kw
 
-    def __call__(self, client_params, weights):
+    def __call__(self, client_params, weights, mask=None):
         del weights
+        if mask is not None:
+            raise ValueError(f"{self.rule_name} cannot run on padded "
+                             "clusters (supports_mask=False)")
         return self._rule(client_params, **self._kw)
 
 
@@ -115,7 +145,11 @@ for _name in ROBUST_RULES:
 # frequency controllers
 # --------------------------------------------------------------------- #
 class FixedController:
-    """Benchmark scheme: constant a_i (still tolerance-bounded by Alg. 2)."""
+    """Benchmark scheme: constant a_i (still tolerance-bounded by Alg. 2).
+    ``needs_ctx=False``: the engine skips the per-round host-side ctx
+    (device syncs) entirely — the fused-round fast path."""
+
+    needs_ctx = False
 
     def __init__(self, a: int = 5, n_actions: int = 10):
         self.a = int(a)
@@ -135,6 +169,8 @@ class DQNController:
     registry factory train one on the DT-simulated environment — the paper's
     headline mechanism: the agent interacts with the twins, not the devices.
     """
+
+    needs_ctx = True                    # select() reads the DQN observation
 
     def __init__(self, agent: dqn_lib.DQNState, cfg: dqn_lib.DQNConfig):
         self.agent = agent
@@ -183,6 +219,8 @@ class LyapunovGreedyController:
     argmax, and advances the deficit queue with the realized consumption.
     A model-free baseline between `fixed` and the trained DQN.
     """
+
+    needs_ctx = True          # select() scores the P2 objective from ctx
 
     def __init__(self, budget: float = 250.0, horizon: int = 100,
                  kappa: float = 0.08, f_star: float = 0.1,
@@ -243,14 +281,18 @@ def _lyapunov(params: Dict[str, Any]):
 # task adapters
 # --------------------------------------------------------------------- #
 class MLPTask:
-    """The paper's device-scale MNIST-shaped classifier."""
+    """The paper's device-scale MNIST-shaped classifier.
+
+    jit-safe: ``local_train`` takes the step count as a *traced* scalar
+    (fori_loop with a dynamic trip count), so the fused round can apply the
+    Alg.-2 tolerance bound inside the compiled program without a per-value
+    recompile."""
 
     def __init__(self, hidden: int = 200, n_classes: int = 10):
         self.hidden = hidden
         self.n_classes = n_classes
         self._client_sgd_v = jax.jit(
-            jax.vmap(self._client_sgd, in_axes=(0, 0, None, None)),
-            static_argnums=3)
+            jax.vmap(self._client_sgd, in_axes=(0, 0, None, None)))
         self._losses_v = jax.vmap(classifier_loss, in_axes=(0, 0))
 
     @staticmethod

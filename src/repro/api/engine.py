@@ -1,13 +1,43 @@
 """Execution engines behind the `Federation` facade.
 
-`DeviceScaleEngine` is the paper's §IV-D discrete-event simulator (formerly
-the `AsyncFederation` monolith) with every policy choice delegated to a
-pluggable component: the frequency controller picks a_i, the aggregator
-folds member updates (Eqn 6 through the Pallas ``trust_aggregate`` kernel by
-default), the task adapter owns the model, and the shared Eqn-19
-`time_weighted_average` closes each global round.  The legacy
-`AsyncFederation` entry point is a shim over this engine, so both entry
-points produce identical traces at a fixed seed
+`DeviceScaleEngine` is the paper's §IV-D discrete-event simulator rebuilt
+around an immutable **`FleetState`** struct-of-arrays pytree: twins,
+reputation, channel, stacked per-cluster parameters, energy, the global
+model, and the RNG key all live in one donated device-resident structure.
+Each asynchronous cluster round — batch gather from a precomputed padded
+partition matrix, vmapped local training, the Eqn 4-5 belief/reputation
+update, Eqn-6 aggregation through the masked Pallas ``trust_aggregate``
+kernel, the optional DP path, energy accounting (Eqns 7-8), the twin
+observe/calibrate step, and the Eqn-19 staleness-weighted global average —
+is **one fused jit-compiled call** `_fleet_round(state, c, a, members,
+mask)`.  Only the event heap, the controller's `select`, evaluation, and
+the float64 cumulative-energy tally stay on the host: a single 4-scalar
+metrics dict (bounded a, round duration, consumed energy, mean loss)
+crosses the device boundary per round.
+
+Ragged cluster memberships run as fixed-shape grids: mask-aware
+aggregators (``supports_mask=True``, i.e. trust/fedavg) share one compiled
+round over a (n_clusters, M) padded membership table whose padding slots
+hold an out-of-range sentinel (gathers fill, scatters drop).  Aggregators
+built on rank statistics (krum, median, ...) cannot ignore padded rows, so
+the engine compiles one exact-shape round per distinct cluster size
+instead — same function, shape-specialized by jit's cache.
+
+``fused=False`` runs the *identical* round function eagerly (op-by-op
+dispatch with per-round host syncs) — the pre-refactor execution profile.
+Fused and reference modes consume the same RNG streams and the same
+fixed-shape math, so their traces match at a fixed seed — bit for bit on
+scheduling, counters and accuracies; to the last ulp on float reductions,
+where XLA's fused (FMA-contracted) form may differ from eager dispatch
+(tests/test_api.py::test_fused_round_parity_with_reference) — and
+benchmarks/engine_bench.py measures the fusion speedup between them.
+One *statistical* change from the pre-refactor engine: batches are always
+sampled with replacement (`sample_member_batch`'s fixed-shape randint);
+the old per-member loop sampled without replacement when a shard held at
+least ``local_batch`` examples.
+
+The legacy `AsyncFederation` entry point is a shim over this engine, so
+both entry points produce identical traces at a fixed seed
 (tests/test_api.py::test_spec_parity_with_legacy covers the shim's
 config-translation path).
 
@@ -17,20 +47,22 @@ the same controller protocol and emits the same `RoundRecord` trace.
 from __future__ import annotations
 
 import heapq
-from typing import Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering import cluster_devices, tolerance_bound
-from repro.core.energy import (channel_transition, comm_energy,
-                               compute_energy, step_channel)
+from repro.core.clustering import (cluster_devices, ensure_nonempty,
+                                   padded_membership, tolerance_bound)
+from repro.core.energy import channel_transition, round_energy, step_channel
 from repro.core.trust import (belief, gradient_diversity, learning_quality,
                               time_weighted_average, trust_weights,
                               update_reputation)
-from repro.core.twin import (TwinState, calibrate, calibrated_freq,
-                             init_twins, observe_round, sample_deviation)
+from repro.core.twin import (calibrate, calibrated_freq, init_twins,
+                             member_view, observe_round_members,
+                             sample_deviation, TwinState)
+from repro.data.federated import padded_partition, sample_member_batch
 
 from .components import ControllerCtx
 from .records import FLTrace, RoundRecord
@@ -42,11 +74,28 @@ def _flatten_params(tree):
                             for x in jax.tree.leaves(tree)], axis=1)
 
 
+class FleetState(NamedTuple):
+    """Struct-of-arrays state of the whole federation, one jit-donatable
+    pytree.  Leaves are device arrays; the only host-side state the engine
+    keeps beside this is the event heap, the round counter mirror, and the
+    float64 cumulative-energy accumulator (per-device energies live in
+    ``twins.energy``)."""
+    twins: TwinState            # per-device digital twins (SoA over fleet)
+    rep: jnp.ndarray            # (n,)  Eqn-5 reputations
+    channel: jnp.ndarray        # (n,)  Markov channel state, int32
+    cluster_params: Any         # pytree, leaves (n_clusters, ...)
+    global_params: Any          # pytree, leaves (...): Eqn-19 aggregate
+    cluster_ts: jnp.ndarray     # (n_clusters,) last-update round, f32
+    round: jnp.ndarray          # ()  global round counter, int32
+    key: jnp.ndarray            # PRNG key driving every round's randomness
+
+
 class DeviceScaleEngine:
     """Discrete-event asynchronous clustered FL over a device fleet."""
 
     def __init__(self, spec: FederationSpec, data, parts, *,
-                 controller, aggregator, task):
+                 controller, aggregator, task,
+                 fused: Optional[bool] = None):
         assert spec.scale == DEVICE_SCALE
         self.spec = spec
         self.data = data
@@ -55,183 +104,303 @@ class DeviceScaleEngine:
         self.aggregator = aggregator
         self.task = task
 
+        n = spec.fleet.n_devices
+        C = spec.clustering.n_clusters
         key = jax.random.PRNGKey(spec.seed)
-        (self.key, kt, kd, kc, kp, km) = jax.random.split(key, 6)
-        self.twins = sample_deviation(
-            kd, init_twins(kt, spec.fleet.n_devices), spec.fleet.dt_max_dev)
+        key0, kt, kd, kc, kp, km = jax.random.split(key, 6)
+        twins = sample_deviation(kd, init_twins(kt, n), spec.fleet.dt_max_dev)
         sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
-        self.twins = self.twins._replace(data_size=sizes)
-        self.assign, _ = cluster_devices(kc, self.twins,
-                                         spec.clustering.n_clusters)
-        self.assign = np.asarray(self.assign)
-        self.global_params = task.init(kp, dim=data.x.shape[1])
-        self.cluster_params = [self.global_params] * spec.clustering.n_clusters
-        self.cluster_ts = np.zeros(spec.clustering.n_clusters)
-        self.round = 0
-        self.rep = jnp.ones((spec.fleet.n_devices,))
-        self.channel = jnp.zeros((spec.fleet.n_devices,), jnp.int32)
-        self.malicious = np.zeros(spec.fleet.n_devices, bool)
-        n_mal = int(spec.fleet.malicious_frac * spec.fleet.n_devices)
+        twins = twins._replace(data_size=sizes)
+        assign, _ = cluster_devices(kc, twins, C)
+        self.assign = ensure_nonempty(np.asarray(assign), C)
+        self._member_table, self._member_mask = padded_membership(
+            self.assign, C)
+
+        self.malicious = np.zeros(n, bool)
+        n_mal = int(spec.fleet.malicious_frac * n)
         if n_mal:
             self.malicious[np.asarray(jax.random.choice(
-                km, spec.fleet.n_devices, (n_mal,), replace=False))] = True
-        self.energy_used = 0.0
-        self.agg_count = 0
+                km, n, (n_mal,), replace=False))] = True
+        self._malicious_dev = jnp.asarray(self.malicious, jnp.float32)
 
-    # ---------------------------------------------------------------- #
-    def _cluster_freq(self, c: int) -> float:
-        members = np.where(self.assign == c)[0]
-        f = np.asarray(calibrated_freq(self.twins))[members]
-        return float(f.min()) if len(members) else 1.0
+        gp = task.init(kp, dim=data.x.shape[1])
+        cparams = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (C,) + l.shape) + 0.0, gp)
+        self.state = FleetState(
+            twins=twins, rep=jnp.ones((n,)),
+            channel=jnp.zeros((n,), jnp.int32),
+            cluster_params=cparams, global_params=gp,
+            cluster_ts=jnp.zeros((C,), jnp.float32),
+            round=jnp.zeros((), jnp.int32), key=key0)
+
+        # static fleet tables consumed by the fused round
+        self._x = jnp.asarray(data.x)
+        self._y = jnp.asarray(data.y)
+        self._part_idx, self._part_len = padded_partition(parts)
+        self._trans = channel_transition(spec.channel.p_good)
+        self._n_actions = int(getattr(controller, "n_actions", 10))
+        self._needs_ctx = bool(getattr(controller, "needs_ctx", True))
+        # mask-aware aggregators share one padded fixed-shape compilation;
+        # rank-statistic rules get exact member shapes (one compile per size)
+        self._padded = bool(getattr(aggregator, "supports_mask", False))
+        if self._padded:
+            self._members = [self._member_table[c] for c in range(C)]
+            self._masks = [self._member_mask[c] for c in range(C)]
+        else:
+            self._members = [jnp.asarray(np.where(self.assign == c)[0],
+                                         jnp.int32) for c in range(C)]
+            self._masks = [jnp.ones((len(g),), bool) for g in self._members]
+
+        self.fused = True if fused is None else bool(fused)
+        # donate the FleetState buffers so the round updates in place
+        # (CPU ignores donation and warns, so only request it elsewhere)
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._round_fn = (
+            jax.jit(self._fleet_round, donate_argnums=donate)
+            if self.fused else self._fleet_round)
+        self._rounds = 0
+        # cumulative energy accumulates host-side in float64 (the per-round
+        # `consumed` scalar crosses to the host anyway); a float32 device
+        # accumulator would drop sub-ulp additions on long simulations
+        self._energy_used = 0.0
+        self._hv = None             # per-round host-view cache (ctx/obs)
+        self._hv_round = -1
+
+    # ------------------------------------------------------------------ #
+    # the fused round: everything below runs inside one jit call
+    # ------------------------------------------------------------------ #
+    def _cluster_freq_table(self, twins) -> jnp.ndarray:
+        """Straggler (min) calibrated frequency of every cluster, (C,).
+        One masked reduction over the padded membership table per call —
+        the old engine recomputed the full-fleet `calibrated_freq` O(C^2)
+        times per frequency pick."""
+        f = calibrated_freq(twins)
+        fmat = f.at[self._member_table].get(mode="fill",
+                                            fill_value=jnp.inf)
+        fmin = jnp.min(jnp.where(self._member_mask, fmat, jnp.inf), axis=1)
+        return jnp.where(self._member_mask.any(axis=1), fmin, 1.0)
+
+    def _fleet_round(self, state: FleetState, c, a_raw, members, mask):
+        """One asynchronous cluster round (paper §IV-D), state -> state.
+
+        Fuses: Alg.-2 tolerance bound, padded batch gather, vmapped local
+        SGD, Eqns 4-5 trust, Eqn-6 aggregation (masked Pallas kernel),
+        optional DP, Eqns 7-8 energy, twin observe/calibrate, channel step,
+        and the Eqn-19 global aggregate.  ``members``/``mask`` are a
+        fixed-shape member slice (padded with the sentinel n, or exact)."""
+        spec = self.spec
+        task = self.task
+        twins = state.twins
+        mask_f = mask.astype(jnp.float32)
+        cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
+        key, kb, ke, kc2, kdp = jax.random.split(state.key, 5)
+
+        # --- controller choice capped by the Alg.-2 tolerance bound
+        cluster_freq = self._cluster_freq_table(twins)
+        t_min = jnp.min(1.0 / jnp.maximum(cluster_freq, 1e-6))
+        alpha = jnp.minimum(
+            1.0, spec.clustering.alpha0 +
+            spec.clustering.alpha_growth * state.round.astype(jnp.float32))
+        a = tolerance_bound(jnp.asarray(a_raw), cluster_freq[c], t_min,
+                            alpha)
+        a = jnp.clip(a, 1, self._n_actions)
+
+        # --- local batches from the padded partition matrix
+        sel = sample_member_batch(kb, self._part_idx, self._part_len,
+                                  members, spec.local_batch)
+        x = self._x[sel]
+        y = self._y[sel]
+        mal_m = self._malicious_dev.at[members].get(mode="fill",
+                                                    fill_value=0.0)
+        y = jnp.where(mal_m[:, None] > 0.5, task.corrupt_labels(y), y)
+        batch = {"x": x, "y": y}
+
+        # --- a local steps on every member (vmap), from the cluster model
+        m_dim = members.shape[0]
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[c], (m_dim,) + l.shape[1:]),
+            state.cluster_params)
+        new = task.local_train(stacked, batch, spec.lr, a)
+
+        # --- trust update (Eqns 4-5) & pluggable aggregation (Eqn 6)
+        upd_flat = _flatten_params(new) - _flatten_params(stacked)
+        q = learning_quality(upd_flat, mask)
+        div = gradient_diversity(upd_flat, mask)
+        b = belief(member_view(twins, members), q, spec.channel.pkt_fail,
+                   div)
+        rep_m = update_reputation(
+            state.rep.at[members].get(mode="fill", fill_value=1.0), b,
+            spec.channel.pkt_fail, spec.iota)
+        rep = state.rep.at[members].set(rep_m, mode="drop")
+        w = trust_weights(rep_m, mask)
+        agg = (self.aggregator(new, w, mask) if self._padded
+               else self.aggregator(new, w))
+        if spec.privacy.clip > 0.0:
+            from repro.core.privacy import dp_aggregate
+            cur = jax.tree.map(lambda l: l[c], state.cluster_params)
+            agg = dp_aggregate(
+                kdp, new, cur,
+                w if spec.aggregator.kind == "trust" else mask_f / cnt,
+                spec.privacy.clip, spec.privacy.noise, n_clients=cnt)
+        cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
+                               state.cluster_params, agg)
+
+        # --- losses, energy (Eqns 7-8), twins
+        losses = task.losses(new, batch)
+        true_freq = (twins.freq + twins.freq_dev).at[members].get(
+            mode="fill", fill_value=1.0)
+        ch_m = state.channel.at[members].get(mode="fill", fill_value=0)
+        e = round_energy(a.astype(jnp.float32), true_freq, ch_m, ke) * mask_f
+        consumed = jnp.sum(e)
+        twins = observe_round_members(twins, members, losses, e,
+                                      self._malicious_dev)
+        if spec.fleet.calibrate_dt:
+            twins = calibrate(twins)
+        channel = step_channel(kc2, state.channel, self._trans)
+
+        # --- Eqn 19: staleness-weighted global aggregate (async pull)
+        rnd = state.round + 1
+        ts = state.cluster_ts.at[c].set(rnd.astype(jnp.float32))
+        gparams, _ = time_weighted_average(cparams,
+                                           rnd.astype(jnp.float32) - ts)
+        cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
+                               cparams, gparams)
+
+        # --- round duration from the *post-calibration* straggler freq
+        dur = a.astype(jnp.float32) / jnp.maximum(
+            self._cluster_freq_table(twins)[c], 1e-6)
+
+        new_state = FleetState(
+            twins=twins, rep=rep, channel=channel, cluster_params=cparams,
+            global_params=gparams, cluster_ts=ts, round=rnd, key=key)
+        metrics = {"a": a, "dur": dur, "consumed": consumed,
+                   "loss": jnp.sum(losses * mask_f) / cnt}
+        return new_state, metrics
+
+    # ------------------------------------------------------------------ #
+    # host side: controller context (lazy, cached per round)
+    # ------------------------------------------------------------------ #
+    def _host_view(self):
+        if self._hv_round == self._rounds and self._hv is not None:
+            return self._hv
+        st = self.state
+        self._hv = {
+            "loss": np.asarray(st.twins.loss),
+            "freq": np.asarray(calibrated_freq(st.twins)),
+            "channel": np.asarray(st.channel),
+            "energy": self._energy_used,
+            "cluster_freq": np.asarray(self._cluster_freq_table(st.twins)),
+        }
+        self._hv_round = self._rounds
+        return self._hv
 
     def _obs(self, c: int) -> jnp.ndarray:
         """DQN observation (§IV-B layout, envs.OBS_DIM)."""
         from repro.core.envs import OBS_DIM
+        hv = self._host_view()
         members = self.assign == c
-        loss = float(np.nan_to_num(
-            np.asarray(self.twins.loss)[members].mean(), posinf=2.3))
-        tau = float(self.task.hidden_mean(self.cluster_params[c],
-                                          self.data.x[:256]))
-        ch = np.asarray(jax.nn.one_hot(self.channel, 3).mean(0))
+        loss = float(np.nan_to_num(hv["loss"][members].mean(), posinf=2.3))
+        tau = float(self.task.hidden_mean(
+            jax.tree.map(lambda l: l[c], self.state.cluster_params),
+            self._x[:256]))
+        ch = np.asarray(jax.nn.one_hot(self.state.channel, 3).mean(0))
         feats = np.concatenate([
-            [loss, 2.3 - loss, self.energy_used, self.round / 100.0, tau],
-            np.eye(10)[min(9, self.agg_count % 10)], ch,
-            [float(calibrated_freq(self.twins)[members].mean()), 0.0, 0.0]])
+            [loss, 2.3 - loss, hv["energy"], self._rounds / 100.0, tau],
+            np.eye(10)[min(9, self._rounds % 10)], ch,
+            [float(hv["freq"][members].mean()), 0.0, 0.0]])
         return jnp.asarray(np.pad(feats, (0, OBS_DIM - len(feats))),
                            jnp.float32)
 
     def _ctx(self, c: int) -> ControllerCtx:
+        hv = self._host_view()
         members = self.assign == c
-        loss = float(np.nan_to_num(
-            np.asarray(self.twins.loss)[members].mean(), posinf=2.3))
-        ch = np.asarray(self.channel)[members]
+        loss = float(np.nan_to_num(hv["loss"][members].mean(), posinf=2.3))
+        ch = hv["channel"][members]
         return ControllerCtx(
-            round=self.round, cluster=c, obs=lambda: self._obs(c),
-            cluster_loss=loss, cluster_freq=self._cluster_freq(c),
-            mean_freq=float(calibrated_freq(self.twins)[members].mean()),
+            round=self._rounds, cluster=c, obs=lambda: self._obs(c),
+            cluster_loss=loss, cluster_freq=float(hv["cluster_freq"][c]),
+            mean_freq=float(hv["freq"][members].mean()),
             channel_good_frac=float((ch == 0).mean()) if len(ch) else 1.0,
-            energy_used=self.energy_used)
+            energy_used=hv["energy"])
 
-    def _pick_frequency(self, c: int) -> int:
-        """Controller choice capped by the Alg.-2 tolerance bound."""
-        spec = self.spec
-        a = self.controller.select(self._ctx(c))
-        t_min = min(1.0 / max(self._cluster_freq(cc), 1e-6)
-                    for cc in range(spec.clustering.n_clusters))
-        alpha = min(1.0, spec.clustering.alpha0 +
-                    spec.clustering.alpha_growth * self.round)
-        a = int(tolerance_bound(jnp.asarray(a), jnp.asarray(
-            self._cluster_freq(c)), jnp.asarray(t_min), alpha))
-        return max(1, min(a, self.controller.n_actions))
+    def _null_ctx(self, c: int) -> ControllerCtx:
+        """Sync-free ctx for ``needs_ctx=False`` controllers; obs stays
+        lazily available should a controller reach for it anyway."""
+        return ControllerCtx(
+            round=self._rounds, cluster=c, obs=lambda: self._obs(c),
+            cluster_loss=0.0, cluster_freq=1.0, mean_freq=1.0,
+            channel_good_frac=1.0, energy_used=0.0)
 
-    # ---------------------------------------------------------------- #
-    def _cluster_round(self, c: int, a: int, kround):
-        """One asynchronous cluster round: local training on every member,
-        pluggable intra-cluster aggregation.  Returns sim duration."""
-        spec = self.spec
-        members = np.where(self.assign == c)[0]
-        kb, ke, kc2 = jax.random.split(kround, 3)
-
-        # --- local batches (possibly label-flipped for malicious nodes)
-        xs, ys = [], []
-        for m in members:
-            ix = self.parts[m]
-            sel = np.asarray(jax.random.choice(
-                jax.random.fold_in(kb, int(m)), jnp.asarray(ix),
-                (spec.local_batch,), replace=len(ix) < spec.local_batch))
-            y = np.asarray(self.data.y)[sel]
-            if self.malicious[m]:
-                y = self.task.corrupt_labels(y)        # Byzantine label flip
-            xs.append(np.asarray(self.data.x)[sel])
-            ys.append(y)
-        batch = {"x": jnp.asarray(np.stack(xs)),
-                 "y": jnp.asarray(np.stack(ys))}
-
-        # --- a local steps on every member (vmap), from the cluster model
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(members),) + x.shape),
-            self.cluster_params[c])
-        new = self.task.local_train(stacked, batch, spec.lr, a)
-
-        # --- trust update (Eqns 4-5) & pluggable aggregation (Eqn 6)
-        upd_flat = _flatten_params(new) - _flatten_params(stacked)
-        q = learning_quality(upd_flat)
-        div = gradient_diversity(upd_flat)
-        tw_m = jax.tree.map(lambda x: x[members], self.twins._asdict())
-        twins_m = TwinState(**tw_m)
-        b = belief(twins_m, q, spec.channel.pkt_fail, div)
-        rep_m = update_reputation(self.rep[members], b,
-                                  spec.channel.pkt_fail, spec.iota)
-        self.rep = self.rep.at[jnp.asarray(members)].set(rep_m)
-        w = trust_weights(rep_m)
-        agg = self.aggregator(new, w)
-        if spec.privacy.clip > 0.0:
-            from repro.core.privacy import dp_aggregate
-            self.key, kdp = jax.random.split(self.key)
-            uniform = jnp.full((len(members),), 1.0 / len(members))
-            agg = dp_aggregate(
-                kdp, new, self.cluster_params[c],
-                w if spec.aggregator.kind == "trust" else uniform,
-                spec.privacy.clip, spec.privacy.noise)
-        self.cluster_params[c] = agg
-
-        # --- losses, energy, twins
-        losses = self.task.losses(new, batch)
-        e_cmp = a * compute_energy(
-            (self.twins.freq + self.twins.freq_dev)[members])
-        e_com = comm_energy(self.channel[members], ke)
-        consumed = float(e_cmp.sum() + e_com.sum())
-        self.energy_used += consumed
-        full_loss = self.twins.loss.at[jnp.asarray(members)].set(losses)
-        full_e = jnp.zeros_like(self.twins.energy).at[
-            jnp.asarray(members)].set(e_cmp + e_com)
-        self.twins = observe_round(
-            self.twins, full_loss, full_e,
-            jnp.asarray(self.malicious, jnp.float32))
-        if spec.fleet.calibrate_dt:
-            self.twins = calibrate(self.twins)
-        self.channel = step_channel(kc2, self.channel,
-                                    channel_transition(spec.channel.p_good))
-        self.controller.observe(None, consumed,
-                                float(np.asarray(losses).mean()))
-        return float(a) / max(self._cluster_freq(c), 1e-6)
-
-    def _global_aggregate(self):
-        """Eqn 19 via the one shared staleness-weighting implementation."""
-        staleness = jnp.asarray(self.round - self.cluster_ts, jnp.float32)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *self.cluster_params)
-        self.global_params, _ = time_weighted_average(stacked, staleness)
-        self.agg_count += 1
-
-    # ---------------------------------------------------------------- #
-    def run(self, eval_every: float = 1.0) -> FLTrace:
+    # ------------------------------------------------------------------ #
+    def run(self, eval_every: float = 1.0,
+            max_rounds: Optional[int] = None) -> FLTrace:
         spec = self.spec
         trace = FLTrace()
         events = [(0.0, c) for c in range(spec.clustering.n_clusters)]
         heapq.heapify(events)
         t = 0.0
         next_eval = 0.0
+        done = 0
         while events and t < spec.sim_seconds:
+            if max_rounds is not None and done >= max_rounds:
+                break
             t, c = heapq.heappop(events)
             if t >= spec.sim_seconds:
                 break
-            self.key, ka, kr = jax.random.split(self.key, 3)
-            a = self._pick_frequency(c)
-            dur = self._cluster_round(c, a, kr)
-            self.round += 1
-            self.cluster_ts[c] = self.round
-            self._global_aggregate()
-            # redistribute global model to the cluster (async pull)
-            self.cluster_params[c] = self.global_params
-            heapq.heappush(events, (t + dur, c))
+            ctx = self._ctx(c) if self._needs_ctx else self._null_ctx(c)
+            a_raw = int(self.controller.select(ctx))
+            self.state, metrics = self._round_fn(
+                self.state, c, a_raw, self._members[c], self._masks[c])
+            self._rounds += 1
+            done += 1
+            m = jax.device_get(metrics)
+            self._energy_used += float(m["consumed"])
+            self.controller.observe(None, float(m["consumed"]),
+                                    float(m["loss"]))
+            heapq.heappush(events, (t + float(m["dur"]), c))
             if t >= next_eval:
-                m = self.task.evaluate(self.global_params, self.data)
+                ev = self.task.evaluate(self.state.global_params, self.data)
                 trace.append(RoundRecord(
-                    t=t, round=self.round, cluster=c, a=a,
-                    loss=m["loss"], acc=m.get("acc"),
-                    energy=self.energy_used, agg_count=self.agg_count))
+                    t=t, round=self._rounds, cluster=c, a=int(m["a"]),
+                    loss=ev["loss"], acc=ev.get("acc"),
+                    energy=self._energy_used,
+                    agg_count=self._rounds))
                 next_eval = t + eval_every
         return trace
+
+    # legacy attribute views (shims, examples, tests) ------------------- #
+    @property
+    def rep(self):
+        return self.state.rep
+
+    @property
+    def twins(self):
+        return self.state.twins
+
+    @property
+    def channel(self):
+        return self.state.channel
+
+    @property
+    def global_params(self):
+        return self.state.global_params
+
+    @property
+    def cluster_params(self):
+        return [jax.tree.map(lambda l, i=i: l[i], self.state.cluster_params)
+                for i in range(self.spec.clustering.n_clusters)]
+
+    @property
+    def energy_used(self) -> float:
+        return self._energy_used
+
+    @property
+    def agg_count(self) -> int:
+        return self._rounds
+
+    @property
+    def round(self) -> int:
+        return self._rounds
 
 
 class DatacenterEngine:
@@ -267,13 +436,16 @@ class DatacenterEngine:
                 self.task.cfg, self.opt, mode=self.task.mode, local_steps=a))
         return self._steps[a]
 
-    def run(self, eval_every: float = 1.0) -> FLTrace:
+    def run(self, eval_every: float = 1.0,
+            max_rounds: Optional[int] = None) -> FLTrace:
         del eval_every                      # every round is recorded
         from repro.core.envs import OBS_DIM
         spec = self.spec
         trace = FLTrace()
         loss = float("nan")
-        for i in range(spec.rounds):
+        rounds = spec.rounds if max_rounds is None else min(spec.rounds,
+                                                            max_rounds)
+        for i in range(rounds):
             self.key, kb = jax.random.split(self.key)
             obs_feats = jnp.asarray([0.0 if np.isnan(loss) else loss,
                                      i / max(spec.rounds, 1), 0.0])

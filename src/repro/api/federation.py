@@ -23,7 +23,7 @@ class Federation:
     """Facade tying spec -> components -> engine -> trace."""
 
     def __init__(self, spec: FederationSpec, *, data=None, parts=None,
-                 controller=None, aggregator=None, task=None):
+                 controller=None, aggregator=None, task=None, fused=None):
         spec.validate()
         self.spec = spec
         self.controller = controller or registry.CONTROLLERS.get(
@@ -42,7 +42,7 @@ class Federation:
                 data, parts = _default_device_data(spec)
             self.engine = DeviceScaleEngine(
                 spec, data, parts, controller=self.controller,
-                aggregator=self.aggregator, task=self.task)
+                aggregator=self.aggregator, task=self.task, fused=fused)
         elif spec.scale == DATACENTER_SCALE:
             from .engine import DatacenterEngine
             self.engine = DatacenterEngine(
@@ -59,8 +59,10 @@ class Federation:
     def from_dict(cls, d: dict, **kw) -> "Federation":
         return cls(FederationSpec.from_dict(d), **kw)
 
-    def run(self, eval_every: float = 1.0) -> FLTrace:
-        return self.engine.run(eval_every=eval_every)
+    def run(self, eval_every: float = 1.0, **kw) -> FLTrace:
+        """Extra keywords (e.g. the device engine's ``max_rounds``) pass
+        through to the engine's run."""
+        return self.engine.run(eval_every=eval_every, **kw)
 
     # convenience passthroughs (device scale) -------------------------- #
     def __getattr__(self, name):

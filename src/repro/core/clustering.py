@@ -3,11 +3,18 @@
 Clusters devices by (data size, compute power) so same-cluster nodes have
 similar local-training wall time — eliminating the straggler effect.  Pure
 JAX (lax.fori_loop Lloyd iterations) so it can consume TwinState directly.
+
+`ensure_nonempty` and `padded_membership` turn a k-means assignment into the
+fixed-shape fleet tables the fused `FleetState` round consumes: Lloyd
+iterations can abandon a centroid, and a memberless cluster used to crash
+the engine (np.stack([]) in the old per-member loop) — re-seeding from the
+largest cluster keeps every event-heap entry schedulable.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .twin import TwinState, calibrated_freq
 
@@ -42,6 +49,49 @@ def cluster_devices(key, twins: TwinState, k: int):
     feats = _normalize(jnp.stack(
         [twins.data_size, calibrated_freq(twins)], axis=1))
     return kmeans(key, feats, k)
+
+
+def ensure_nonempty(assign, k: int):
+    """Re-seed memberless clusters so every cluster owns >= 1 device.
+
+    K-means can converge with an abandoned centroid; a memberless cluster
+    has no defined round duration and used to crash the engine.  Each empty
+    cluster deterministically steals the first device of the currently
+    largest cluster (host-side, init-time only).  Requires n >= k.
+    """
+    assign = np.asarray(assign).copy()
+    if assign.shape[0] < k:
+        raise ValueError(f"cannot fill {k} clusters from {assign.shape[0]} "
+                         "devices")
+    counts = np.bincount(assign, minlength=k)
+    for c in range(k):
+        if counts[c] == 0:
+            donor = int(counts.argmax())
+            i = int(np.where(assign == donor)[0][0])
+            assign[i] = c
+            counts[donor] -= 1
+            counts[c] += 1
+    return assign
+
+
+def padded_membership(assign, k: int):
+    """Fixed-shape membership tables for the fused cluster round.
+
+    -> (member_table (k, M) int32, mask (k, M) bool) with M = max cluster
+    size.  Padding slots hold the out-of-range sentinel ``n`` so jitted
+    gathers use mode='fill' and scatters use mode='drop' — ragged cluster
+    memberships then run as one fixed-shape grid per round.
+    """
+    assign = np.asarray(assign)
+    n = assign.shape[0]
+    groups = [np.where(assign == c)[0] for c in range(k)]
+    m = max((len(g) for g in groups), default=0)
+    table = np.full((k, max(m, 1)), n, dtype=np.int32)
+    mask = np.zeros((k, max(m, 1)), dtype=bool)
+    for c, g in enumerate(groups):
+        table[c, :len(g)] = g
+        mask[c, :len(g)] = True
+    return jnp.asarray(table), jnp.asarray(mask)
 
 
 def tolerance_bound(a, freq, t_min, alpha: float):

@@ -54,6 +54,18 @@ def comm_energy(state, key, params: ChannelParams = ChannelParams()):
     return params.n_com * params.model_bits / jnp.maximum(rate, 1.0)
 
 
+def round_energy(a, true_freq, channel_state, key,
+                 params: ChannelParams = ChannelParams()):
+    """Eqns 7+8 for one cluster round: ``a`` local trainings plus one
+    upload, per member.  ``a`` may be a traced scalar (the fused round
+    applies the Alg.-2 tolerance bound inside jit); ``true_freq`` is the
+    device's real frequency f + f̂ (the twin's mapped value plus deviation).
+    """
+    e_cmp = a * compute_energy(true_freq, params)
+    e_com = comm_energy(channel_state, key, params)
+    return e_cmp + e_com
+
+
 # ------------------------------------------------------------------ #
 # finite-state Markov channel
 # ------------------------------------------------------------------ #

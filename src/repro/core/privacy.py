@@ -32,9 +32,11 @@ def clip_client_updates(client_updates, clip_norm: float):
 
 
 def add_gaussian_noise(key, aggregate, clip_norm: float,
-                       noise_multiplier: float, n_clients: int):
-    """Add the DP Gaussian mechanism's noise to an aggregated update."""
-    sigma = noise_multiplier * clip_norm / max(n_clients, 1)
+                       noise_multiplier: float, n_clients):
+    """Add the DP Gaussian mechanism's noise to an aggregated update.
+    ``n_clients`` may be a traced scalar (fused fixed-shape rounds pass the
+    true member count, not the padded one)."""
+    sigma = noise_multiplier * clip_norm / jnp.maximum(n_clients, 1)
     leaves, treedef = jax.tree.flatten(aggregate)
     keys = jax.random.split(key, len(leaves))
     noised = [x + sigma * jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype)
@@ -43,9 +45,11 @@ def add_gaussian_noise(key, aggregate, clip_norm: float,
 
 
 def dp_aggregate(key, client_params, global_params, weights,
-                 clip_norm: float, noise_multiplier: float):
+                 clip_norm: float, noise_multiplier: float, n_clients=None):
     """Trust-weighted DP aggregation: clip per-client deltas, weight,
-    combine, noise.  Composes the paper's Eqn 6 with client-level DP."""
+    combine, noise.  Composes the paper's Eqn 6 with client-level DP.
+    ``n_clients`` overrides the noise denominator when ``weights`` carries
+    zero-weight padding rows (defaults to the leading dim)."""
     deltas = jax.tree.map(lambda c, g: c - g[None].astype(c.dtype),
                           client_params, global_params)
     deltas = clip_client_updates(deltas, clip_norm)
@@ -54,7 +58,8 @@ def dp_aggregate(key, client_params, global_params, weights,
         lambda d: jnp.einsum("c...,c->...", d.astype(jnp.float32),
                              w.astype(jnp.float32)),
         deltas)
-    agg = add_gaussian_noise(key, agg, clip_norm, noise_multiplier,
-                             weights.shape[0])
+    agg = add_gaussian_noise(
+        key, agg, clip_norm, noise_multiplier,
+        weights.shape[0] if n_clients is None else n_clients)
     return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(g.dtype),
                         global_params, agg)

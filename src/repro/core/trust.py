@@ -24,30 +24,43 @@ from .twin import TwinState
 _EPS = 1e-8
 
 
-def learning_quality(updates_flat: jnp.ndarray) -> jnp.ndarray:
+def learning_quality(updates_flat: jnp.ndarray, mask=None) -> jnp.ndarray:
     """q_{i->j} from Eqn 4: normalized distance of each client's update from
     the mean update (honesty-of-the-majority assumption).  FoolsGold-style:
     *small* distance from the majority direction => high quality; extreme
     outliers (malicious / lazy) => low quality.
 
     updates_flat: (n, P) flattened per-client parameter updates.
+    mask: optional (n,) validity mask — padded rows (fused fixed-shape
+    rounds) are excluded from the majority statistics; their own scores are
+    arbitrary and must be masked by the caller.
     -> (n,) quality scores in (0, 1].
     """
-    mean = jnp.mean(updates_flat, axis=0, keepdims=True)
-    dist = jnp.linalg.norm(updates_flat - mean, axis=1)           # (n,)
-    rel = dist / (jnp.sum(dist) + _EPS)                           # Eqn 4's ratio
-    # convert distance-share to quality: majority-consistent -> ~1
-    n = updates_flat.shape[0]
-    return jnp.clip(1.0 - rel * n / jnp.maximum(n - 1, 1), _EPS, 1.0)
+    if mask is None:
+        mean = jnp.mean(updates_flat, axis=0, keepdims=True)
+        dist = jnp.linalg.norm(updates_flat - mean, axis=1)       # (n,)
+        rel = dist / (jnp.sum(dist) + _EPS)                       # Eqn 4's ratio
+        n = updates_flat.shape[0]
+        # convert distance-share to quality: majority-consistent -> ~1
+        return jnp.clip(1.0 - rel * n / jnp.maximum(n - 1, 1), _EPS, 1.0)
+    m = mask.astype(updates_flat.dtype)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)
+    mean = jnp.sum(updates_flat * m[:, None], axis=0,
+                   keepdims=True) / cnt
+    dist = jnp.linalg.norm(updates_flat - mean, axis=1) * m
+    rel = dist / (jnp.sum(dist) + _EPS)
+    return jnp.clip(1.0 - rel * cnt / jnp.maximum(cnt - 1.0, 1.0), _EPS, 1.0)
 
 
-def gradient_diversity(updates_flat: jnp.ndarray) -> jnp.ndarray:
+def gradient_diversity(updates_flat: jnp.ndarray, mask=None) -> jnp.ndarray:
     """FoolsGold signal [12]: max pairwise cosine similarity per client.
     Sybil-coordinated clients share gradient direction (cs -> 1) and are
-    down-weighted."""
+    down-weighted.  ``mask`` excludes padded rows from the pairwise max."""
     norm = updates_flat / (jnp.linalg.norm(updates_flat, axis=1, keepdims=True) + _EPS)
     cs = norm @ norm.T
     cs = cs - jnp.eye(cs.shape[0]) * 2.0       # exclude self
+    if mask is not None:
+        cs = jnp.where(mask[None, :], cs, -2.0)   # padded peers never count
     mx = jnp.max(cs, axis=1)
     return jnp.clip(1.0 - jnp.maximum(mx, 0.0), _EPS, 1.0)
 
@@ -73,14 +86,22 @@ def update_reputation(rep, b, pkt_fail, iota: float = 0.1) -> jnp.ndarray:
     return rep + b + iota * pkt_fail
 
 
-def trust_weights(rep) -> jnp.ndarray:
+def trust_weights(rep, mask=None) -> jnp.ndarray:
     """Normalized aggregation weights: T_i / sum T (Eqn 6 numerator shares).
     Degenerate fleet (all reputations <= 0) falls back to uniform weights —
-    found by the hypothesis simplex property test."""
+    found by the hypothesis simplex property test.  With ``mask``, padded
+    clients get exactly-zero weight and the uniform fallback spreads over
+    the valid clients only."""
     rep = jnp.maximum(rep, 0.0)
+    if mask is None:
+        total = jnp.sum(rep)
+        n = rep.shape[-1] if rep.ndim else 1
+        uniform = jnp.full_like(rep, 1.0 / max(n, 1))
+        return jnp.where(total > 1e-6, rep / jnp.maximum(total, 1e-6), uniform)
+    m = mask.astype(rep.dtype)
+    rep = rep * m
     total = jnp.sum(rep)
-    n = rep.shape[-1] if rep.ndim else 1
-    uniform = jnp.full_like(rep, 1.0 / max(n, 1))
+    uniform = m / jnp.maximum(jnp.sum(m), 1.0)
     return jnp.where(total > 1e-6, rep / jnp.maximum(total, 1e-6), uniform)
 
 

@@ -69,3 +69,39 @@ def observe_round(twins: TwinState, losses, energies, malicious_mask=None
         alpha=twins.alpha + (1.0 - mal),
         beta=twins.beta + mal,
     )
+
+
+# ------------------------------------------------------------------ #
+# fixed-shape member views for the fused FleetState round
+# ------------------------------------------------------------------ #
+def member_view(twins: TwinState, members) -> TwinState:
+    """Gather a (M,) member slice of every twin array, jit-safely.
+
+    ``members`` may hold the out-of-range padding sentinel n; those slots
+    fill with neutral values (alpha=1 so the Eqn-4 interaction ratio stays
+    finite) and must be masked by the caller before any reduction.
+    """
+    def take(x, fill):
+        return x.at[members].get(mode="fill", fill_value=fill)
+
+    return TwinState(
+        loss=take(twins.loss, 0.0), freq=take(twins.freq, 1.0),
+        freq_dev=take(twins.freq_dev, 0.0),
+        dev_estimate=take(twins.dev_estimate, 0.0),
+        energy=take(twins.energy, 0.0), data_size=take(twins.data_size, 1.0),
+        alpha=take(twins.alpha, 1.0), beta=take(twins.beta, 0.0),
+        router_entropy=take(twins.router_entropy, 0.0))
+
+
+def observe_round_members(twins: TwinState, members, losses, energies,
+                          malicious_mask=None) -> TwinState:
+    """`observe_round` driven by one cluster's (M,) member slice.
+
+    Scatters the member losses/energies into the fleet (padding sentinels
+    drop) and applies the fleet-wide interaction-count update exactly as
+    `observe_round` does.
+    """
+    full_loss = twins.loss.at[members].set(losses, mode="drop")
+    full_e = jnp.zeros_like(twins.energy).at[members].set(
+        energies, mode="drop")
+    return observe_round(twins, full_loss, full_e, malicious_mask)

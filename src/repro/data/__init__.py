@@ -1,6 +1,8 @@
 from .synthetic import (SyntheticClassification, make_classification,
                         token_stream, lm_batches)
-from .federated import dirichlet_partition, federated_batches
+from .federated import (dirichlet_partition, federated_batches,
+                        padded_partition, sample_member_batch)
 
 __all__ = ["SyntheticClassification", "make_classification", "token_stream",
-           "lm_batches", "dirichlet_partition", "federated_batches"]
+           "lm_batches", "dirichlet_partition", "federated_batches",
+           "padded_partition", "sample_member_batch"]

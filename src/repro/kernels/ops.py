@@ -18,14 +18,16 @@ from .trust_aggregate import trust_aggregate
 INTERPRET = jax.default_backend() == "cpu"
 
 
-def trust_aggregate_tree(client_params, weights, *, interpret=None):
-    """Eqn 6 over a pytree with leading client dim, via the Pallas kernel."""
+def trust_aggregate_tree(client_params, weights, mask=None, *,
+                         interpret=None):
+    """Eqn 6 over a pytree with leading client dim, via the Pallas kernel.
+    ``mask`` (C,) selects valid rows (padded fixed-shape cluster rounds)."""
     interpret = INTERPRET if interpret is None else interpret
     leaves, treedef = jax.tree.flatten(client_params)
     C = leaves[0].shape[0]
     flat = jnp.concatenate(
         [x.reshape(C, -1).astype(jnp.float32) for x in leaves], axis=1)
-    agg = trust_aggregate(flat, weights, interpret=interpret)
+    agg = trust_aggregate(flat, weights, mask, interpret=interpret)
     out, off = [], 0
     for x in leaves:
         n = x[0].size

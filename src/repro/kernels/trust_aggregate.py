@@ -9,6 +9,12 @@ N writes, compute on the VPU, no MXU needed.
 Tiling: grid over N // BLOCK; each instance holds a (C, BLOCK) tile + the
 (C, 1) weight column in VMEM.  BLOCK = 8192 f32 keeps the tile ≤ C·32 KB,
 comfortably inside the ~16 MB v5e VMEM for fleet sizes up to hundreds.
+
+The masked variant takes an extra (C,) validity column so *padded* client
+rows (ragged cluster memberships run as fixed-shape grids in the fused
+`FleetState` round) contribute exactly zero: the kernel multiplies the
+weight column by the mask before the reduction, keeping one compiled grid
+shape for every cluster regardless of its true membership count.
 """
 from __future__ import annotations
 
@@ -28,23 +34,40 @@ def _kernel(w_ref, x_ref, o_ref):
     o_ref[...] = jnp.sum(x * w, axis=0).astype(o_ref.dtype)
 
 
+def _masked_kernel(w_ref, m_ref, x_ref, o_ref):
+    # identical reduction with the weight column zeroed at padded rows
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(x * w, axis=0).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def trust_aggregate(params_flat, weights, *, block: int = BLOCK,
+def trust_aggregate(params_flat, weights, mask=None, *, block: int = BLOCK,
                     interpret: bool = False):
-    """(C, N) x (C,) -> (N,).  N is padded to a multiple of ``block``."""
+    """(C, N) x (C,) -> (N,).  N is padded to a multiple of ``block``.
+
+    ``mask`` (C,) marks valid client rows; None means all rows are valid
+    (the dense kernel).  Masked and dense agree exactly when the masked-out
+    rows carry zero weight — the kernel-equivalence property test pins it.
+    """
     C, N = params_flat.shape
     pad = (-N) % block
     x = jnp.pad(params_flat, ((0, 0), (0, pad))) if pad else params_flat
     Np = N + pad
-    out = pl.pallas_call(
-        _kernel,
-        grid=(Np // block,),
-        in_specs=[
-            pl.BlockSpec((C, 1), lambda i: (0, 0)),
-            pl.BlockSpec((C, block), lambda i: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((Np,), params_flat.dtype),
-        interpret=interpret,
-    )(weights[:, None], x)
+    grid = (Np // block,)
+    out_spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((Np,), params_flat.dtype)
+    w_spec = pl.BlockSpec((C, 1), lambda i: (0, 0))
+    x_spec = pl.BlockSpec((C, block), lambda i: (0, i))
+    if mask is None:
+        out = pl.pallas_call(
+            _kernel, grid=grid, in_specs=[w_spec, x_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(weights[:, None], x)
+    else:
+        out = pl.pallas_call(
+            _masked_kernel, grid=grid,
+            in_specs=[w_spec, pl.BlockSpec((C, 1), lambda i: (0, 0)), x_spec],
+            out_specs=out_spec, out_shape=out_shape, interpret=interpret,
+        )(weights[:, None], mask.astype(jnp.float32)[:, None], x)
     return out[:N]

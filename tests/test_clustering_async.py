@@ -5,6 +5,7 @@ import numpy as np
 
 from repro.core import (AsyncFLConfig, AsyncFederation, cluster_devices,
                         kmeans, run_sync_baseline, tolerance_bound)
+from repro.core.clustering import ensure_nonempty, padded_membership
 from repro.core.twin import init_twins, sample_deviation
 from repro.data import dirichlet_partition, make_classification
 
@@ -24,6 +25,55 @@ def test_cluster_devices_groups_similar_compute():
     twins = sample_deviation(key, init_twins(key, 16))
     assign, _ = cluster_devices(key, twins, 4)
     assert set(np.asarray(assign)) <= set(range(4))
+
+
+def test_ensure_nonempty_reseeds_empty_clusters():
+    """Regression: k-means can abandon a centroid; a memberless cluster
+    used to crash the engine (np.stack([]) in the per-member loop).  After
+    re-seeding, every cluster owns >= 1 device and no device is lost."""
+    assign = np.asarray([0, 0, 0, 0, 2, 2])        # cluster 1 and 3 empty
+    fixed = ensure_nonempty(assign, 4)
+    counts = np.bincount(fixed, minlength=4)
+    assert (counts >= 1).all() and counts.sum() == 6
+    # already-full assignments pass through untouched
+    ok = np.asarray([0, 1, 2, 0, 1, 2])
+    np.testing.assert_array_equal(ensure_nonempty(ok, 3), ok)
+
+
+def test_engine_survives_degenerate_single_device_clusters():
+    """n_devices == n_clusters forces 1-member clusters (maximal risk of
+    kmeans emptying one); the engine must still build and run."""
+    key = jax.random.PRNGKey(2)
+    from repro.data import dirichlet_partition, make_classification
+    data = make_classification(key, n=512, dim=16)
+    parts = dirichlet_partition(key, data.y, 5)
+    cfg = AsyncFLConfig(n_devices=5, n_clusters=5, local_batch=16,
+                        sim_seconds=2.0, seed=2)
+    fed = AsyncFederation(cfg, data, parts)
+    assert np.bincount(fed.assign, minlength=5).min() >= 1
+    tr = fed.run(eval_every=1.0)
+    assert tr.times and np.isfinite(tr.losses).all()
+
+
+def test_padded_partition_rejects_empty_shards():
+    """A client with no data must fail loudly at init — inside the
+    fixed-shape round it would silently train on dataset row 0 forever."""
+    import pytest
+    from repro.data import padded_partition
+    with pytest.raises(ValueError, match="empty data shards"):
+        padded_partition([np.arange(4), np.asarray([], np.int64)])
+    idx, length = padded_partition([np.arange(4), np.arange(2)])
+    assert idx.shape == (2, 4) and list(np.asarray(length)) == [4, 2]
+
+
+def test_padded_membership_tables_cover_every_device_once():
+    assign = np.asarray([0, 2, 2, 1, 0, 2])
+    table, mask = padded_membership(assign, 3)
+    table, mask = np.asarray(table), np.asarray(mask)
+    assert table.shape == mask.shape == (3, 3)     # max cluster size 3
+    listed = sorted(table[mask].tolist())
+    assert listed == list(range(6))                # each device exactly once
+    assert (table[~mask] == 6).all()               # sentinel = n
 
 
 def test_tolerance_bound_caps_slow_clusters():

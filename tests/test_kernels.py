@@ -5,6 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
+
 from repro.kernels import (flash_attention, rglru_scan, selective_scan,
                            trust_aggregate, trust_aggregate_tree)
 from repro.kernels import ref
@@ -23,6 +28,37 @@ def test_trust_aggregate_sweep(C, N, dtype):
     tol = 1e-6 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@given(st.integers(2, 12), st.integers(1, 11), st.integers(64, 3000))
+@settings(max_examples=12, deadline=None)
+def test_masked_trust_aggregate_matches_dense_on_valid_rows(C, valid, N):
+    """Property: the masked kernel over a padded (C, N) client matrix equals
+    the dense kernel over just the valid rows — padded rows, even filled
+    with garbage, contribute exactly zero (the fused fixed-shape cluster
+    round relies on this)."""
+    valid = min(valid, C)
+    key = jax.random.PRNGKey(C * 7919 + N)
+    x = jax.random.normal(key, (C, N))
+    # garbage in the padded rows must not leak into the aggregate
+    x = x.at[valid:].set(1e30)
+    mask = jnp.arange(C) < valid
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (valid,)))
+    w_pad = jnp.zeros((C,)).at[:valid].set(w)
+    got = trust_aggregate(x, w_pad, mask, interpret=True)
+    want = trust_aggregate(x[:valid], w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_masked_trust_aggregate_zeroes_nonzero_padded_weights():
+    """The mask wins even when the caller forgot to zero padded weights."""
+    x = jnp.ones((4, 256))
+    w = jnp.full((4,), 0.25)
+    mask = jnp.asarray([True, True, False, False])
+    got = trust_aggregate(x, w, mask, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 0.5, atol=1e-7)
 
 
 def test_trust_aggregate_tree_matches_tree_average():
