@@ -26,4 +26,11 @@ python -m repro.api.run --scenario lm-modeA --rounds 2
 echo "== engine throughput (fused FleetState round vs reference, fast) =="
 python benchmarks/engine_bench.py --fast
 
+echo "== scan-over-rounds (run_scanned vs event heap, fast) =="
+python benchmarks/engine_bench.py --scanned --fast
+
+echo "== scanned scenario CLI =="
+python -m repro.api.run --scenario adaptive-scanned --rounds 6 \
+    --devices 8 --clusters 2 | tail -n 3
+
 echo "smoke OK"

@@ -1,62 +1,48 @@
-"""Adaptive aggregation frequency (paper Figs 4/5/8): compare the
-DQN+Lyapunov agent against fixed frequencies under a resource budget in a
-time-varying channel.
+"""Adaptive aggregation frequency (paper Figs 4/5/8): the DQN+Lyapunov
+agent against fixed frequencies under a resource budget in a time-varying
+channel — the paper's headline experiment, run **sync-free** end to end on
+the in-jit control plane:
+
+  * Alg.-1 DQN training lowers into one nested `lax.scan` over the
+    DT-simulated environment (`repro.control.scanned_dqn`, triggered by the
+    `dqn` controller registry factory);
+  * every federation runs `execution="scanned"`: K asynchronous cluster
+    rounds, the controller's `select`, and the Eqn-12 deficit queue compile
+    into a single `lax.scan` — device metrics cross to the host once.
 
     PYTHONPATH=src python examples/adaptive_frequency.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
+import repro.api as api
+from repro.api import ControllerSpec, Federation, FederationSpec, FleetSpec
 
-import repro.core as core
-from repro.core import envs
+ROUNDS = 40
+
+BASE = FederationSpec(
+    fleet=FleetSpec(n_devices=16, dt_max_dev=0.2),
+    clustering=api.ClusteringSpec(n_clusters=4),
+    channel=api.ChannelSpec(p_good=0.4),
+    task=api.TaskSpec("mlp", {"n_samples": 2048, "dim": 64}),
+    execution="scanned", rounds=ROUNDS,
+    sim_seconds=1e9, local_batch=32, seed=0)
 
 
-def rollout(policy, p, key, episodes=3):
-    """policy(obs, key) -> action. Returns (mean final loss, mean energy)."""
-    step_env = jax.jit(envs.step, static_argnums=2)
-    losses, energy = [], []
-    for ep in range(episodes):
-        s, obs = envs.reset(jax.random.fold_in(key, ep), p)
-        done, e = False, 0.0
-        while not done:
-            key, ka = jax.random.split(key)
-            a = policy(obs, ka)
-            s, obs, r, done, info = step_env(s, a, p)
-            e += float(info["consumed"])
-        losses.append(float(s.loss))
-        energy.append(e)
-    return np.mean(losses), np.mean(energy)
+def run(name: str, controller: ControllerSpec):
+    trace = Federation.from_spec(
+        BASE.replace(controller=controller)).run()
+    final = trace.records[-1]                   # the appended eval record
+    print(f"{name},{final.loss:.4f},{final.acc:.3f},{final.energy:.1f}")
+    return trace
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    p = envs.EnvParams(horizon=40, p_good=0.4)
-
-    # train the agent (Algorithm 1)
-    dcfg = core.DQNConfig(buffer_size=1024, batch_size=32, lr=2e-3)
-    agent = core.init_dqn(key, dcfg)
-    step_env = jax.jit(envs.step, static_argnums=2)
-    for ep in range(8):
-        s, obs = envs.reset(jax.random.fold_in(key, ep), p)
-        done = False
-        while not done:
-            key, ka, kt = jax.random.split(key, 3)
-            a = core.select_action(ka, agent, dcfg, obs)
-            s, obs2, r, done, _ = step_env(s, a, p)
-            agent = core.store(agent, obs, a, r, obs2)
-            agent, _ = core.dqn_train_step(kt, agent, dcfg)
-            obs = obs2
-
-    print("policy,final_loss,energy")
-    loss, e = rollout(
-        lambda obs, k: jnp.argmax(core.q_values(agent.eval_params, obs)),
-        p, jax.random.PRNGKey(7))
-    print(f"dqn_adaptive,{loss:.4f},{e:.2f}")
-    for a_fixed in [1, 3, 5, 10]:
-        loss, e = rollout(lambda obs, k, a=a_fixed: jnp.int32(a - 1),
-                          p, jax.random.PRNGKey(7))
-        print(f"fixed_{a_fixed},{loss:.4f},{e:.2f}")
+    print(f"scheme,final_loss,final_acc,energy   ({ROUNDS} scanned rounds)")
+    run("dqn_adaptive",
+        ControllerSpec("dqn", {"episodes": 4, "horizon": 25,
+                               "p_good": 0.4}))
+    run("lyapunov_greedy",
+        ControllerSpec("lyapunov", {"budget": 400.0, "horizon": ROUNDS}))
+    for a in (1, 3, 5, 10):
+        run(f"fixed_{a}", ControllerSpec("fixed", {"a": a}))
 
 
 if __name__ == "__main__":

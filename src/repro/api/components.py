@@ -18,7 +18,11 @@ FrequencyController
                   ``observe(ctx, consumed, loss)`` feedback hook after the
                   round; ``n_actions`` caps a_i.  Class attr ``needs_ctx``:
                   False lets the engine skip materializing the host-side
-                  `ControllerCtx` (device->host syncs) each round.
+                  `ControllerCtx` (device->host syncs) each round.  An
+                  optional ``scan_policy() -> repro.control.ScanPolicy``
+                  provides the in-jit twin of `select` that
+                  `DeviceScaleEngine.run_scanned` traces into its
+                  lax.scan-over-rounds (all built-ins implement it).
 TaskAdapter       model/task plug: init / loss / local training / metrics.
                   ``local_train`` must accept a *traced* step count (the
                   tolerance bound is computed inside jit).
@@ -35,14 +39,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import policy as ctl_policy
+from repro.control.scanned_dqn import train_on_env
 from repro.core import dqn as dqn_lib
 from repro.core import envs
-from repro.core.energy import comm_energy, compute_energy
-from repro.core.lyapunov import (DeficitQueue, drift_penalty_reward,
-                                 init_queue, step_queue, v_schedule)
+from repro.core.lyapunov import init_queue, step_queue
 from repro.core.mlp import (accuracy, classifier_loss, init_mlp_classifier,
                             mlp_hidden_mean)
 from repro.core.robust import AGGREGATORS as ROBUST_RULES
+from repro.core.robust import MASKED_AGGREGATORS as MASKED_RULES
 from repro.core.trust import trust_weighted_average
 from repro.core.twin import calibrated_freq
 from repro.kernels.ops import INTERPRET, trust_aggregate_tree
@@ -99,22 +104,27 @@ class WeightedAggregator:
 
 class RobustAggregator:
     """Byzantine-robust rules from repro.core.robust; ignores trust weights
-    (that is their point: no reputation signal needed).  Rank statistics
-    (median, sorts) cannot ignore padded rows, so these rules run on
-    exact-shape clusters (supports_mask=False)."""
-
-    supports_mask = False
+    (that is their point: no reputation signal needed).  Rules with a
+    fixed-capacity masked variant (`median`, via the ±inf-padded sort in
+    `robust.masked_coordinate_median`) advertise ``supports_mask=True`` and
+    join the engine's padded fused round; the remaining rank statistics
+    (krum, trimmed mean) run on exact-shape clusters — one compile per
+    distinct cluster size."""
 
     def __init__(self, rule: str, **kw):
         self.rule_name = rule
         self._rule = ROBUST_RULES[rule]
+        self._masked_rule = MASKED_RULES.get(rule)
+        self.supports_mask = self._masked_rule is not None
         self._kw = kw
 
     def __call__(self, client_params, weights, mask=None):
         del weights
         if mask is not None:
-            raise ValueError(f"{self.rule_name} cannot run on padded "
-                             "clusters (supports_mask=False)")
+            if self._masked_rule is None:
+                raise ValueError(f"{self.rule_name} cannot run on padded "
+                                 "clusters (supports_mask=False)")
+            return self._masked_rule(client_params, mask, **self._kw)
         return self._rule(client_params, **self._kw)
 
 
@@ -161,6 +171,9 @@ class FixedController:
     def observe(self, ctx, consumed, loss):
         pass
 
+    def scan_policy(self) -> ctl_policy.ScanPolicy:
+        return ctl_policy.fixed_policy(self.a)
+
 
 class DQNController:
     """Greedy policy of a trained Alg.-1 DQN agent.
@@ -184,29 +197,32 @@ class DQNController:
     def observe(self, ctx, consumed, loss):
         pass
 
+    def scan_policy(self) -> ctl_policy.ScanPolicy:
+        return ctl_policy.dqn_policy(self.agent.eval_params)
+
+    def distill(self, **kw) -> ctl_policy.PolicyTable:
+        """Freeze the greedy head into a lookup table
+        (`repro.control.distill_table`) for microsecond selects."""
+        return ctl_policy.distill_table(self.agent.eval_params, **kw)
+
     @classmethod
     def pretrain(cls, seed: int = 0, episodes: int = 4, horizon: int = 25,
                  p_good: float = 0.5, calibrate_dt: bool = True,
                  buffer_size: int = 512, batch_size: int = 32,
                  lr: float = 2e-3) -> "DQNController":
-        """Train a fresh agent on the DT environment (§IV-C)."""
+        """Train a fresh agent on the DT environment (§IV-C, Alg. 1).
+
+        The whole run — episodes of epsilon-greedy interaction, replay
+        writes, TD steps, target syncs — lowers into one nested `lax.scan`
+        (`repro.control.scanned_dqn.train_on_env`); no host episode loop.
+        """
         p = envs.EnvParams(horizon=horizon, p_good=p_good,
                            calibrate_dt=calibrate_dt)
         cfg = dqn_lib.DQNConfig(buffer_size=buffer_size,
                                 batch_size=batch_size, lr=lr)
         agent = dqn_lib.init_dqn(jax.random.PRNGKey(seed), cfg)
-        key = jax.random.PRNGKey(seed + 1)
-        step_env = jax.jit(envs.step, static_argnums=2)
-        for ep in range(episodes):
-            s, obs = envs.reset(jax.random.fold_in(key, ep), p)
-            done = False
-            while not done:
-                key, ka, kt = jax.random.split(key, 3)
-                a = dqn_lib.select_action(ka, agent, cfg, obs)
-                s, obs2, r, done, _ = step_env(s, a, p)
-                agent = dqn_lib.store(agent, obs, a, r, obs2)
-                agent, _ = dqn_lib.train_step(kt, agent, cfg)
-                obs = obs2
+        agent, _ = train_on_env(jax.random.PRNGKey(seed + 1), agent, cfg, p,
+                                episodes=episodes)
         return cls(agent, cfg)
 
 
@@ -218,6 +234,12 @@ class LyapunovGreedyController:
     twin-estimated energy and an exponential loss-decay model, picks the
     argmax, and advances the deficit queue with the realized consumption.
     A model-free baseline between `fixed` and the trained DQN.
+
+    Scoring goes through `repro.control.policy.lyapunov_scores` — the same
+    f32 device math the in-jit `scan_policy` traces into the fused round —
+    so the event-heap and scanned execution paths pick identical actions
+    (jnp.argmax and the old strict-greater host loop both keep the earliest
+    maximum on ties).
     """
 
     needs_ctx = True          # select() scores the P2 objective from ctx
@@ -233,27 +255,30 @@ class LyapunovGreedyController:
         self.v_growth = v_growth
         self.n_actions = int(n_actions)
 
-    def _estimate_cost(self, ctx: ControllerCtx, a: int) -> float:
-        e_cmp = float(compute_energy(jnp.asarray([ctx.mean_freq]))[0])
-        # expected comm energy ~ model_bits / rate at the mean channel mix;
-        # use the good-state fraction as a rate proxy (cheap, deterministic)
-        e_com = e_cmp * (2.0 - ctx.channel_good_frac)
-        return a * e_cmp + e_com
-
     def select(self, ctx: ControllerCtx) -> int:
-        v = float(v_schedule(ctx.round, self.v0, self.v_growth))
-        loss = ctx.cluster_loss
-        best_a, best_r = 1, -np.inf
-        for a in range(1, self.n_actions + 1):
-            pred = self.f_star + (loss - self.f_star) * np.exp(-self.kappa * a)
-            cost = self._estimate_cost(ctx, a)
-            r = float(drift_penalty_reward(loss, pred, cost, self.queue, v))
-            if r > best_r:
-                best_a, best_r = a, r
-        return best_a
+        scores = ctl_policy.lyapunov_scores(
+            self.queue.q, jnp.float32(ctx.round),
+            jnp.float32(ctx.cluster_loss), jnp.float32(ctx.mean_freq),
+            jnp.float32(ctx.channel_good_frac), n_actions=self.n_actions,
+            kappa=self.kappa, f_star=self.f_star, v0=self.v0,
+            v_growth=self.v_growth)
+        return int(jnp.argmax(scores)) + 1
 
     def observe(self, ctx, consumed, loss):
         self.queue = step_queue(self.queue, consumed)
+
+    def scan_policy(self) -> ctl_policy.ScanPolicy:
+        """In-jit twin reading the Eqn-12 backlog off `FleetState.queue`
+        (the engine advances that leaf with the same realized consumption
+        `observe` sees on the host path)."""
+        return ctl_policy.lyapunov_policy(
+            n_actions=self.n_actions, kappa=self.kappa, f_star=self.f_star,
+            v0=self.v0, v_growth=self.v_growth)
+
+    def sync_queue(self, q) -> None:
+        """Adopt the device-resident backlog after a scanned run so later
+        host-side selects continue from the same deficit."""
+        self.queue = self.queue._replace(q=jnp.asarray(q, jnp.float32))
 
 
 @register_controller("fixed")

@@ -23,6 +23,27 @@ built on rank statistics (krum, median, ...) cannot ignore padded rows, so
 the engine compiles one exact-shape round per distinct cluster size
 instead — same function, shape-specialized by jit's cache.
 
+The control plane is device-resident too (`repro.control`): the Eqn-12
+Lyapunov deficit queue lives in `FleetState` as an array leaf advanced
+in-jit with the realized consumption, and every built-in controller exposes
+a scannable `(state, CtlObs) -> (action, state)` policy.  ``run_scanned(K)``
+lowers K whole rounds — cluster scheduling by argmin over a carried
+per-cluster event-time vector (reproducing the heap's (t, c) order),
+in-jit `select`, the fused round, and the queue update — into a **single
+`lax.scan`**; per-round metrics are stacked on device and synced once at
+the end, where the float64 cumulative-energy tally is rebuilt from the
+stacked f32 consumptions by the same sequential f64 additions the event
+loop performs (device f64 is unavailable with x64 disabled, and this is
+bitwise identical to accumulating a f64 leaf in the scan carry).  One
+accumulation does differ: the scan carries per-cluster event times in f32
+where the heap sums f64 Python floats, so two clusters whose next-event
+times fall within f32 rounding of each other could in principle be popped
+in a different order — at the tested seeds and scales the traces match
+bit-for-bit on scheduling and counters, but sub-ulp event-time ties are
+not ordered identically by construction.  The
+event-heap path remains for ragged schedules (``sim_seconds`` cutoffs,
+per-round evaluation) and exact-shape robust aggregators.
+
 ``fused=False`` runs the *identical* round function eagerly (op-by-op
 dispatch with per-round host syncs) — the pre-refactor execution profile.
 Fused and reference modes consume the same RNG streams and the same
@@ -53,9 +74,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import policy as ctl_policy
+from repro.control import queue as ctl_queue
 from repro.core.clustering import (cluster_devices, ensure_nonempty,
                                    padded_membership, tolerance_bound)
 from repro.core.energy import channel_transition, round_energy, step_channel
+from repro.core.envs import OBS_DIM
 from repro.core.trust import (belief, gradient_diversity, learning_quality,
                               time_weighted_average, trust_weights,
                               update_reputation)
@@ -86,6 +110,7 @@ class FleetState(NamedTuple):
     cluster_params: Any         # pytree, leaves (n_clusters, ...)
     global_params: Any          # pytree, leaves (...): Eqn-19 aggregate
     cluster_ts: jnp.ndarray     # (n_clusters,) last-update round, f32
+    queue: jnp.ndarray          # ()  Eqn-12 Lyapunov deficit backlog, f32
     round: jnp.ndarray          # ()  global round counter, int32
     key: jnp.ndarray            # PRNG key driving every round's randomness
 
@@ -131,7 +156,11 @@ class DeviceScaleEngine:
             channel=jnp.zeros((n,), jnp.int32),
             cluster_params=cparams, global_params=gp,
             cluster_ts=jnp.zeros((C,), jnp.float32),
+            queue=ctl_queue.init_leaf(),
             round=jnp.zeros((), jnp.int32), key=key0)
+        # Eqn-12 replenishment rate of the controller's deficit queue
+        # (+inf for budgetless controllers: the queue leaf stays 0)
+        self._queue_per_slot = ctl_queue.per_slot_of(controller)
 
         # static fleet tables consumed by the fused round
         self._x = jnp.asarray(data.x)
@@ -163,8 +192,12 @@ class DeviceScaleEngine:
         # `consumed` scalar crosses to the host anyway); a float32 device
         # accumulator would drop sub-ulp additions on long simulations
         self._energy_used = 0.0
-        self._hv = None             # per-round host-view cache (ctx/obs)
-        self._hv_round = -1
+        # control plane: jitted host ctx features / observation builders
+        # + compiled scan paths
+        self._features_fn = jax.jit(self._ctl_features)
+        self._obs_fn = jax.jit(lambda state, c: self._scan_obs(
+            state, c, self._ctl_features(state, c)))
+        self._scan_cache = {}       # K -> compiled lax.scan-over-rounds
 
     # ------------------------------------------------------------------ #
     # the fused round: everything below runs inside one jit call
@@ -195,14 +228,21 @@ class DeviceScaleEngine:
         cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
         key, kb, ke, kc2, kdp = jax.random.split(state.key, 5)
 
-        # --- controller choice capped by the Alg.-2 tolerance bound
+        # --- controller choice capped by the Alg.-2 tolerance bound.
+        # T_m is the fastest cluster's time for the *requested* local phase
+        # (a_req / f_max, the convention test_tolerance_bound_caps_slow_
+        # clusters pins); slower clusters get proportionally fewer steps,
+        # scaling in as alpha grows.  The old reference (one step of the
+        # fastest cluster) made the cap floor to 1 for every cluster at
+        # alpha <= 1, silencing every frequency controller.
         cluster_freq = self._cluster_freq_table(twins)
-        t_min = jnp.min(1.0 / jnp.maximum(cluster_freq, 1e-6))
+        a_req = jnp.clip(jnp.asarray(a_raw), 1, self._n_actions)
+        t_ref = a_req.astype(jnp.float32) / jnp.maximum(
+            jnp.max(cluster_freq), 1e-6)
         alpha = jnp.minimum(
             1.0, spec.clustering.alpha0 +
             spec.clustering.alpha_growth * state.round.astype(jnp.float32))
-        a = tolerance_bound(jnp.asarray(a_raw), cluster_freq[c], t_min,
-                            alpha)
+        a = tolerance_bound(a_req, cluster_freq[c], t_ref, alpha)
         a = jnp.clip(a, 1, self._n_actions)
 
         # --- local batches from the padded partition matrix
@@ -266,62 +306,91 @@ class DeviceScaleEngine:
         cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
                                cparams, gparams)
 
+        # --- Eqn 12: the deficit queue advances in-jit with the realized
+        # consumption (budgetless controllers have per_slot=inf -> q = 0)
+        queue = ctl_queue.advance(state.queue, consumed,
+                                  self._queue_per_slot)
+
         # --- round duration from the *post-calibration* straggler freq
         dur = a.astype(jnp.float32) / jnp.maximum(
             self._cluster_freq_table(twins)[c], 1e-6)
 
         new_state = FleetState(
             twins=twins, rep=rep, channel=channel, cluster_params=cparams,
-            global_params=gparams, cluster_ts=ts, round=rnd, key=key)
+            global_params=gparams, cluster_ts=ts, queue=queue, round=rnd,
+            key=key)
         metrics = {"a": a, "dur": dur, "consumed": consumed,
                    "loss": jnp.sum(losses * mask_f) / cnt}
         return new_state, metrics
 
     # ------------------------------------------------------------------ #
-    # host side: controller context (lazy, cached per round)
+    # control plane: per-cluster controller features, computable in-jit
     # ------------------------------------------------------------------ #
-    def _host_view(self):
-        if self._hv_round == self._rounds and self._hv is not None:
-            return self._hv
-        st = self.state
-        self._hv = {
-            "loss": np.asarray(st.twins.loss),
-            "freq": np.asarray(calibrated_freq(st.twins)),
-            "channel": np.asarray(st.channel),
-            "energy": self._energy_used,
-            "cluster_freq": np.asarray(self._cluster_freq_table(st.twins)),
-        }
-        self._hv_round = self._rounds
-        return self._hv
+    def _ctl_features(self, state: FleetState, c):
+        """The f32 scalars a frequency controller scores from, as pure jnp
+        over the padded membership row of cluster ``c``.
 
+        Both execution paths consume this one function — the event loop
+        through the jitted ``self._features_fn`` (4 scalars pulled per
+        round), the scanned path traced straight into the round scan — so
+        host and in-jit ``select`` see identical device math.
+        """
+        twins = state.twins
+        members = self._member_table[c]
+        mask = self._member_mask[c]
+        mask_f = mask.astype(jnp.float32)
+        cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
+
+        loss_m = twins.loss.at[members].get(mode="fill", fill_value=0.0)
+        loss = jnp.sum(jnp.where(mask, loss_m, 0.0)) / cnt
+        loss = jnp.nan_to_num(loss, nan=0.0, posinf=2.3)
+        f_m = calibrated_freq(twins).at[members].get(mode="fill",
+                                                     fill_value=0.0)
+        mean_freq = jnp.sum(jnp.where(mask, f_m, 0.0)) / cnt
+        ch_m = state.channel.at[members].get(mode="fill", fill_value=1)
+        good = jnp.sum(jnp.where(mask, (ch_m == 0).astype(jnp.float32),
+                                 0.0)) / cnt
+        return {"cluster_loss": loss, "mean_freq": mean_freq,
+                "channel_good_frac": good,
+                "cluster_freq": self._cluster_freq_table(twins)[c]}
+
+    def _scan_obs(self, state: FleetState, c, feats) -> jnp.ndarray:
+        """The §IV-B DQN observation, pure jnp — one layout for both the
+        host path (`_obs`) and the round scan.
+
+        Slot 2 carries the Eqn-12 deficit backlog off `FleetState.queue`,
+        matching the env the agent trained on (`envs._obs`; it used to hold
+        the unbounded energy tally, far outside the training range).  Known
+        deployment deviations from the env layout remain: the one-hot
+        encodes round%10 rather than the last action, and the spent/budget
+        fraction (slot 4) is not observable fleet-side — tau stands in.
+        """
+        tau = self.task.hidden_mean(
+            jax.tree.map(lambda l: l[c], state.cluster_params),
+            self._x[:256])
+        return ctl_policy.deploy_obs(
+            feats["cluster_loss"], state.queue,
+            state.round.astype(jnp.float32) / 100.0, tau,
+            state.round % 10, jax.nn.one_hot(state.channel, 3).mean(0),
+            feats["mean_freq"])
+
+    # ------------------------------------------------------------------ #
+    # host side: controller context
+    # ------------------------------------------------------------------ #
     def _obs(self, c: int) -> jnp.ndarray:
-        """DQN observation (§IV-B layout, envs.OBS_DIM)."""
-        from repro.core.envs import OBS_DIM
-        hv = self._host_view()
-        members = self.assign == c
-        loss = float(np.nan_to_num(hv["loss"][members].mean(), posinf=2.3))
-        tau = float(self.task.hidden_mean(
-            jax.tree.map(lambda l: l[c], self.state.cluster_params),
-            self._x[:256]))
-        ch = np.asarray(jax.nn.one_hot(self.state.channel, 3).mean(0))
-        feats = np.concatenate([
-            [loss, 2.3 - loss, hv["energy"], self._rounds / 100.0, tau],
-            np.eye(10)[min(9, self._rounds % 10)], ch,
-            [float(hv["freq"][members].mean()), 0.0, 0.0]])
-        return jnp.asarray(np.pad(feats, (0, OBS_DIM - len(feats))),
-                           jnp.float32)
+        """DQN observation for host-side `select`: the same `_scan_obs`
+        function the scanned path traces, as one jitted call."""
+        return self._obs_fn(self.state, jnp.int32(c))
 
     def _ctx(self, c: int) -> ControllerCtx:
-        hv = self._host_view()
-        members = self.assign == c
-        loss = float(np.nan_to_num(hv["loss"][members].mean(), posinf=2.3))
-        ch = hv["channel"][members]
+        f = jax.device_get(self._features_fn(self.state, jnp.int32(c)))
         return ControllerCtx(
             round=self._rounds, cluster=c, obs=lambda: self._obs(c),
-            cluster_loss=loss, cluster_freq=float(hv["cluster_freq"][c]),
-            mean_freq=float(hv["freq"][members].mean()),
-            channel_good_frac=float((ch == 0).mean()) if len(ch) else 1.0,
-            energy_used=hv["energy"])
+            cluster_loss=float(f["cluster_loss"]),
+            cluster_freq=float(f["cluster_freq"]),
+            mean_freq=float(f["mean_freq"]),
+            channel_good_frac=float(f["channel_good_frac"]),
+            energy_used=self._energy_used)
 
     def _null_ctx(self, c: int) -> ControllerCtx:
         """Sync-free ctx for ``needs_ctx=False`` controllers; obs stays
@@ -332,8 +401,115 @@ class DeviceScaleEngine:
             channel_good_frac=1.0, energy_used=0.0)
 
     # ------------------------------------------------------------------ #
+    # scan-over-rounds: K rounds + in-jit controller in one lax.scan
+    # ------------------------------------------------------------------ #
+    def _build_scan_fn(self, K: int, pol: ctl_policy.ScanPolicy):
+        def body(carry, _):
+            state, times, ctl, energy = carry
+            # the event heap pops min (t, c); argmin breaks ties on the
+            # first (lowest) cluster index exactly as tuple order does
+            c = jnp.argmin(times).astype(jnp.int32)
+            t = times[c]
+            feats = self._ctl_features(state, c)
+            obs48 = (self._scan_obs(state, c, feats)
+                     if pol.needs_obs else jnp.zeros((OBS_DIM,),
+                                                     jnp.float32))
+            cobs = ctl_policy.CtlObs(
+                round=state.round, cluster=c, queue=state.queue,
+                cluster_loss=feats["cluster_loss"],
+                cluster_freq=feats["cluster_freq"],
+                mean_freq=feats["mean_freq"],
+                channel_good_frac=feats["channel_good_frac"],
+                energy_used=energy, dqn_obs=obs48)
+            a_raw, ctl = pol.step(ctl, cobs)
+            state, m = self._fleet_round(
+                state, c, a_raw, self._member_table[c],
+                self._member_mask[c])
+            times = times.at[c].set(t + m["dur"])
+            energy = energy + m["consumed"]
+            ys = {"t": t, "cluster": c, "a": m["a"], "dur": m["dur"],
+                  "consumed": m["consumed"], "loss": m["loss"]}
+            return (state, times, ctl, energy), ys
+
+        def run_k(state, times, ctl, energy):
+            return jax.lax.scan(body, (state, times, ctl, energy), None,
+                                length=K)
+
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(run_k, donate_argnums=donate)
+
+    def run_scanned(self, K: int, *, eval_final: bool = True) -> FLTrace:
+        """Run exactly K asynchronous cluster rounds as one `lax.scan`.
+
+        The whole control loop — cluster scheduling, the controller's
+        `select` (via its `scan_policy()`), the fused round, the Eqn-12
+        queue advance — compiles into a single device program; stacked
+        per-round metrics cross the host boundary **once**, after round K.
+        Per-round records carry the round's mean training loss (no
+        intermediate global models exist on the host to evaluate);
+        ``eval_final`` appends one evaluation record for the final model.
+
+        Requires a mask-aware aggregator (the padded fixed-shape round) and
+        a controller exposing ``scan_policy()``; use the event-heap `run`
+        for exact-shape robust rules, ``sim_seconds`` cutoffs, or per-round
+        evaluation.
+        """
+        if not self._padded:
+            raise ValueError(
+                f"aggregator {type(self.aggregator).__name__} has "
+                "supports_mask=False (exact-shape compiles); run_scanned "
+                "needs the padded fused round — use run() instead")
+        scan_policy = getattr(self.controller, "scan_policy", None)
+        if scan_policy is None:
+            raise ValueError(
+                f"controller {type(self.controller).__name__} has no "
+                "scan_policy(); use the event-heap run() instead")
+        pol = scan_policy()
+        K = int(K)
+        fn = self._scan_cache.get(K)
+        if fn is None:
+            fn = self._scan_cache[K] = self._build_scan_fn(K, pol)
+        C = self.spec.clustering.n_clusters
+        (state, _, _, _), ys = fn(
+            self.state, jnp.zeros((C,), jnp.float32), pol.state,
+            jnp.float32(self._energy_used))
+        self.state = state
+        ys = jax.device_get(ys)             # the one end-of-run sync
+        base = self._rounds
+        self._rounds += K
+
+        # rebuild the float64 tally by the same sequential additions the
+        # event loop performs (bitwise-identical cumulative energies)
+        cum = []
+        for ci in np.asarray(ys["consumed"], np.float32):
+            self._energy_used += float(ci)
+            cum.append(self._energy_used)
+        sync_queue = getattr(self.controller, "sync_queue", None)
+        if sync_queue is not None:          # host controller adopts the
+            sync_queue(self.state.queue)    # device-resident backlog
+
+        trace = FLTrace()
+        for i in range(K):
+            trace.append(RoundRecord(
+                t=float(ys["t"][i]), round=base + i + 1,
+                cluster=int(ys["cluster"][i]), a=int(ys["a"][i]),
+                loss=float(ys["loss"][i]), acc=None, energy=cum[i],
+                agg_count=base + i + 1))
+        if eval_final:
+            ev = self.task.evaluate(self.state.global_params, self.data)
+            trace.append(RoundRecord(
+                t=float(ys["t"][-1]) + float(ys["dur"][-1]),
+                round=self._rounds, cluster=int(ys["cluster"][-1]),
+                a=int(ys["a"][-1]), loss=ev["loss"], acc=ev.get("acc"),
+                energy=self._energy_used, agg_count=self._rounds))
+        return trace
+
+    # ------------------------------------------------------------------ #
     def run(self, eval_every: float = 1.0,
             max_rounds: Optional[int] = None) -> FLTrace:
+        if self.spec.execution == "scanned":
+            K = max_rounds if max_rounds is not None else self.spec.rounds
+            return self.run_scanned(K)
         spec = self.spec
         trace = FLTrace()
         events = [(0.0, c) for c in range(spec.clustering.n_clusters)]

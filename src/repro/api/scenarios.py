@@ -61,6 +61,14 @@ def _adaptive() -> FederationSpec:
         sim_seconds=15.0)
 
 
+@register_scenario("adaptive-scanned")
+def _adaptive_scanned() -> FederationSpec:
+    """Full scheme, sync-free: scanned DQN pretrain + lax.scan-over-rounds."""
+    return FederationSpec(
+        controller=ControllerSpec("dqn", {"episodes": 3, "horizon": 20}),
+        execution="scanned", rounds=40, sim_seconds=15.0)
+
+
 @register_scenario("lm-modeA")
 def _lm_mode_a() -> FederationSpec:
     """Datacenter scale: tiny-LM FedAvg-replica (fl_step mode A)."""

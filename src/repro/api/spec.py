@@ -85,7 +85,11 @@ class FederationSpec:
     privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
     channel: ChannelSpec = dataclasses.field(default_factory=ChannelSpec)
     sim_seconds: float = 60.0        # device scale: simulated wall-clock
-    rounds: int = 20                 # datacenter scale: global rounds
+    rounds: int = 20                 # global rounds (datacenter scale, and
+                                     # the K of device-scale "scanned" runs)
+    execution: str = "event"         # device scale: "event" (discrete-event
+                                     # heap) | "scanned" (lax.scan over K
+                                     # rounds, controller in-jit)
     local_batch: int = 64
     lr: float = 0.1
     iota: float = 0.1                # Eqn 5 uncertainty coefficient
@@ -119,6 +123,26 @@ class FederationSpec:
             if self.privacy.clip > 0.0 or self.privacy.noise > 0.0:
                 raise ValueError(
                     "privacy (DP) is not implemented at datacenter scale")
+        if self.execution not in ("event", "scanned"):
+            raise ValueError(f"unknown execution {self.execution!r}; "
+                             "valid: 'event', 'scanned'")
+        if self.execution == "scanned":
+            if self.scale != DEVICE_SCALE:
+                raise ValueError("execution='scanned' is device-scale only "
+                                 "(the datacenter engine is already a "
+                                 "fixed round loop)")
+            # the scan needs the padded fused round: built-in rules without
+            # a masked variant cannot join it (custom registrations are
+            # checked at run_scanned time instead)
+            from repro.core.robust import AGGREGATORS as _ROBUST
+            from repro.core.robust import MASKED_AGGREGATORS as _MASKED
+            if self.aggregator.kind in set(_ROBUST) - set(_MASKED):
+                raise ValueError(
+                    f"aggregator {self.aggregator.kind!r} has no masked "
+                    "variant (supports_mask=False); execution='scanned' "
+                    "needs the padded fused round — pick a mask-aware "
+                    "rule (trust/fedavg/"
+                    + "/".join(sorted(_MASKED)) + ") or execution='event'")
         if self.fleet.n_devices < self.clustering.n_clusters:
             raise ValueError("n_devices < n_clusters")
         return self

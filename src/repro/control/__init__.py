@@ -1,0 +1,35 @@
+"""The in-jit control plane (paper §IV: Lyapunov queue + DQN, Alg. 1).
+
+The paper's core contribution is *adaptive* aggregation frequency, yet the
+controller was the last host-side component of the engine: every adaptive
+round paid a device→host context pull before ``select``.  This package
+makes frequency control a device-resident subsystem with one functional
+interface — ``step(state, CtlObs) -> (action, state)`` — that traces
+inside the fused round:
+
+  queue         Eqn-12 deficit queue as a `FleetState` array leaf,
+                advanced in-jit with the realized consumption
+  policy        `ScanPolicy` implementations: fixed, Lyapunov greedy
+                (Eqn 15), DQN greedy head, and a distilled lookup table
+  scanned_dqn   Alg. 1 training lowered into nested `lax.scan` over the
+                DT-simulated environment (replaces the host episode loop)
+
+`DeviceScaleEngine.run_scanned(K)` consumes these to lower K whole rounds
+— controller included — into a single `lax.scan`; see API.md's
+"Control plane" section.
+"""
+from .policy import (CtlObs, PolicyTable, ScanPolicy, distill_table,
+                     dqn_policy, fixed_policy, lyapunov_policy,
+                     lyapunov_scores, table_policy)
+from .queue import advance as queue_advance_leaf
+from .queue import init_leaf as queue_init_leaf
+from .queue import per_slot_of
+from .scanned_dqn import episode_step, train_on_env
+
+__all__ = [
+    "CtlObs", "ScanPolicy", "PolicyTable",
+    "fixed_policy", "lyapunov_policy", "lyapunov_scores", "dqn_policy",
+    "distill_table", "table_policy",
+    "queue_init_leaf", "queue_advance_leaf", "per_slot_of",
+    "train_on_env", "episode_step",
+]

@@ -1,0 +1,203 @@
+"""In-jit frequency-control policies: `(state, obs) -> (action, state)`.
+
+The uniform functional interface of the control plane.  A `ScanPolicy` is a
+pure step function plus its initial carry; the engine traces it *inside*
+the fused round (`DeviceScaleEngine.run_scanned`), so a policy body must be
+jnp-only — no host syncs, no Python control flow on traced values.  The
+host-side controller classes in `repro.api.components` wrap the same
+functions for the event-heap path, so both execution modes score actions
+with identical device math.
+
+Policies
+  fixed_policy      constant raw a_i (the Alg.-2 bound still applies in the
+                    round itself)
+  lyapunov_policy   Eqn-15 drift-plus-penalty argmax over a ∈ {1..n};
+                    reads the Eqn-12 deficit queue straight off the
+                    `FleetState.queue` leaf via `CtlObs.queue`
+  dqn_policy        greedy head of a trained Alg.-1 DQN on the 48-dim
+                    observation
+  table_policy      a distilled lookup table (`distill_table`) — argmax
+                    resolved at distillation time, selects are three
+                    bucketizes and one gather
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dqn import q_values
+from repro.core.energy import compute_energy
+from repro.core.envs import OBS_DIM
+from repro.core.lyapunov import v_schedule
+
+__all__ = ["CtlObs", "ScanPolicy", "fixed_policy", "lyapunov_policy",
+           "lyapunov_scores", "dqn_policy", "deploy_obs", "distill_table",
+           "table_policy", "PolicyTable"]
+
+
+class CtlObs(NamedTuple):
+    """What an in-jit policy sees each round — all traced scalars except
+    ``dqn_obs``, which the engine materializes only for ``needs_obs``
+    policies (zeros otherwise)."""
+    round: jnp.ndarray              # () i32 global round counter
+    cluster: jnp.ndarray            # () i32 cluster being scheduled
+    queue: jnp.ndarray              # () f32 Eqn-12 deficit backlog
+    cluster_loss: jnp.ndarray       # () f32 masked mean twin loss
+    cluster_freq: jnp.ndarray       # () f32 straggler calibrated frequency
+    mean_freq: jnp.ndarray          # () f32 mean calibrated frequency
+    channel_good_frac: jnp.ndarray  # () f32 members in the good state
+    energy_used: jnp.ndarray        # () f32 running energy tally
+    dqn_obs: jnp.ndarray            # (OBS_DIM,) f32 §IV-B observation
+
+
+class ScanPolicy(NamedTuple):
+    """A scannable controller: pure ``step(state, CtlObs) -> (a_raw, state)``
+    plus the initial carry.  ``needs_obs`` tells the engine whether to build
+    the 48-dim DQN observation (a matmul's worth of work) each round."""
+    state: Any
+    step: Callable[[Any, CtlObs], tuple]
+    needs_obs: bool = False
+
+
+# --------------------------------------------------------------------- #
+# fixed
+# --------------------------------------------------------------------- #
+def fixed_policy(a: int) -> ScanPolicy:
+    a = jnp.asarray(int(a), jnp.int32)
+
+    def step(state, obs: CtlObs):
+        return a, state
+
+    return ScanPolicy(state=(), step=step, needs_obs=False)
+
+
+# --------------------------------------------------------------------- #
+# Lyapunov drift-plus-penalty greedy (Eqns 12-15)
+# --------------------------------------------------------------------- #
+def lyapunov_scores(q, round_idx, loss, mean_freq, good_frac, *,
+                    n_actions: int, kappa: float, f_star: float,
+                    v0: float, v_growth: float) -> jnp.ndarray:
+    """P2 objective of every a ∈ {1..n_actions}, Eqn 15:
+    v·ΔF̂(a) − Q(i)·(a·Ê_cmp + Ê_com), vectorized over actions.
+
+    The loss model is exponential decay toward ``f_star`` at rate ``kappa``
+    per local step; the comm term uses the good-state fraction as a rate
+    proxy.  Shared by the host `LyapunovGreedyController.select` and the
+    in-jit `lyapunov_policy`, so both paths pick identical actions.
+    """
+    a = jnp.arange(1, n_actions + 1, dtype=jnp.float32)
+    v = v_schedule(jnp.asarray(round_idx, jnp.float32), v0, v_growth)
+    pred = f_star + (loss - f_star) * jnp.exp(-kappa * a)
+    e_cmp = compute_energy(jnp.asarray(mean_freq, jnp.float32))
+    e_com = e_cmp * (2.0 - good_frac)
+    cost = a * e_cmp + e_com
+    return v * (loss - pred) - q * cost
+
+
+def lyapunov_policy(*, n_actions: int = 10, kappa: float = 0.08,
+                    f_star: float = 0.1, v0: float = 1.0,
+                    v_growth: float = 0.02) -> ScanPolicy:
+    def step(state, obs: CtlObs):
+        s = lyapunov_scores(obs.queue, obs.round, obs.cluster_loss,
+                            obs.mean_freq, obs.channel_good_frac,
+                            n_actions=n_actions, kappa=kappa, f_star=f_star,
+                            v0=v0, v_growth=v_growth)
+        return jnp.argmax(s).astype(jnp.int32) + 1, state
+
+    return ScanPolicy(state=(), step=step, needs_obs=False)
+
+
+# --------------------------------------------------------------------- #
+# DQN greedy head
+# --------------------------------------------------------------------- #
+def dqn_policy(eval_params) -> ScanPolicy:
+    # the net rides in the policy carry (a traced argument), so a compiled
+    # scan is reusable across retrained agents instead of baking the
+    # weights in as program constants
+    def step(state, obs: CtlObs):
+        q = q_values(state, obs.dqn_obs)
+        return jnp.argmax(q).astype(jnp.int32) + 1, state
+
+    return ScanPolicy(state=eval_params, step=step, needs_obs=True)
+
+
+# --------------------------------------------------------------------- #
+# distilled lookup table
+# --------------------------------------------------------------------- #
+class PolicyTable(NamedTuple):
+    """Actions pre-argmaxed over a (loss × round × channel) grid."""
+    table: jnp.ndarray              # (L, R, G) int32 actions in {1..n}
+    loss_grid: jnp.ndarray          # (L,) f32 bin centers
+    round_grid: jnp.ndarray         # (R,) f32
+    good_grid: jnp.ndarray          # (G,) f32
+
+
+def deploy_obs(loss, queue, round_frac, tau, round_mod, ch3, mean_freq, *,
+               loss_max: float = 2.3) -> jnp.ndarray:
+    """The deployment-side §IV-B observation layout, in one place.
+
+    Slots: [loss, loss_max−loss, Eqn-12 queue, round fraction, tau,
+    one_hot(round_mod, 10), channel one-hot fractions (3), mean calibrated
+    frequency, 0, 0, pad to OBS_DIM].  `DeviceScaleEngine._scan_obs` fills
+    it from live `FleetState`; `_grid_obs` below fills it with grid/neutral
+    values for distillation — both call this builder so the slots cannot
+    drift apart.  (The training env's `envs._obs` keeps its own layout;
+    the engine-side deviations are documented at `_scan_obs`.)
+    """
+    feats = jnp.concatenate([
+        jnp.stack([loss, loss_max - loss, queue, round_frac, tau]),
+        jax.nn.one_hot(jnp.minimum(round_mod, 9), 10),
+        ch3,
+        jnp.stack([mean_freq, jnp.float32(0.0), jnp.float32(0.0)]),
+    ])
+    return jnp.pad(feats, (0, OBS_DIM - feats.shape[0]))
+
+
+def _grid_obs(loss, round_idx, good_frac, *, loss_max: float,
+              horizon: float) -> jnp.ndarray:
+    """Synthesize `deploy_obs` for one grid point (queue/tau/frequency at
+    their neutral values — the distillation marginal)."""
+    ch3 = jnp.stack([good_frac, (1.0 - good_frac) * 0.5,
+                     (1.0 - good_frac) * 0.5])
+    return deploy_obs(loss, jnp.float32(0.0), round_idx / horizon,
+                      jnp.tanh(loss),
+                      jnp.mod(round_idx.astype(jnp.int32), 10), ch3,
+                      jnp.float32(1.0), loss_max=loss_max)
+
+
+def distill_table(eval_params, *, loss_bins: int = 24, round_bins: int = 16,
+                  good_bins: int = 8, loss_max: float = 2.3,
+                  horizon: float = 100.0) -> PolicyTable:
+    """Evaluate the trained net over a feature grid and freeze the argmax.
+
+    One batched forward pass at distillation time buys selects that are
+    three bucketizes and one gather — microseconds, and embeddable anywhere
+    a full matmul stack is too heavy (e.g. per-device firmware tables).
+    """
+    loss_grid = jnp.linspace(0.0, loss_max, loss_bins)
+    round_grid = jnp.linspace(0.0, horizon, round_bins)
+    good_grid = jnp.linspace(0.0, 1.0, good_bins)
+    obs = jax.vmap(lambda l: jax.vmap(lambda r: jax.vmap(
+        lambda g: _grid_obs(l, r, g, loss_max=loss_max, horizon=horizon)
+    )(good_grid))(round_grid))(loss_grid)          # (L, R, G, OBS_DIM)
+    q = q_values(eval_params, obs)                 # (L, R, G, n_actions)
+    table = jnp.argmax(q, axis=-1).astype(jnp.int32) + 1
+    return PolicyTable(table=table, loss_grid=loss_grid,
+                       round_grid=round_grid, good_grid=good_grid)
+
+
+def _nearest(grid, x):
+    return jnp.clip(jnp.searchsorted(0.5 * (grid[1:] + grid[:-1]), x),
+                    0, grid.shape[0] - 1)
+
+
+def table_policy(table: PolicyTable) -> ScanPolicy:
+    def step(state, obs: CtlObs):
+        i = _nearest(table.loss_grid, obs.cluster_loss)
+        j = _nearest(table.round_grid, obs.round.astype(jnp.float32))
+        k = _nearest(table.good_grid, obs.channel_good_frac)
+        return table.table[i, j, k], state
+
+    return ScanPolicy(state=(), step=step, needs_obs=False)

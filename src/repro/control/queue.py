@@ -1,0 +1,44 @@
+"""Device-resident Lyapunov deficit queue (paper §IV-A, Eqns 12-15).
+
+The event-heap engine kept the Eqn-12 backlog inside the host-side
+`LyapunovGreedyController` object, advanced from a pulled ``consumed``
+scalar every round — the last per-round device→host dependency of adaptive
+runs.  This module moves the queue into `FleetState` as a plain f32 array
+leaf: `init_leaf` seeds it, the fused round advances it **in-jit** with the
+realized consumption via `core.lyapunov.queue_advance` (one canonical
+Eqn-12 formula for both the host and the scanned paths), and the in-jit
+controllers in `repro.control.policy` read it straight off the state.
+
+``per_slot_of`` extracts the replenishment rate beta·R_m/k from whatever
+controller drives the engine: controllers without a resource budget (fixed,
+DQN) report +inf, which pins the queue at 0 — the queue leaf then exists in
+every `FleetState` without changing non-Lyapunov dynamics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lyapunov import queue_advance
+
+__all__ = ["init_leaf", "advance", "per_slot_of", "queue_advance"]
+
+NO_BUDGET = float("inf")        # per-slot replenishment that pins q at 0
+
+
+def init_leaf(value: float = 0.0) -> jnp.ndarray:
+    """The FleetState queue leaf: a scalar f32 backlog."""
+    return jnp.asarray(value, jnp.float32)
+
+
+def advance(q, consumed, per_slot: float):
+    """Eqn 12, jit/scan-safe: q' = max(q + consumed - per_slot, 0)."""
+    return queue_advance(q, consumed, per_slot)
+
+
+def per_slot_of(controller) -> float:
+    """Replenishment rate of a controller's deficit queue, +inf if it has
+    none (max(q + e - inf, 0) == 0, so budgetless controllers keep q = 0)."""
+    dq = getattr(controller, "queue", None)
+    if dq is None:
+        return NO_BUDGET
+    return float(dq.per_slot)

@@ -1,0 +1,109 @@
+"""Alg. 1 (DQN on the DT-simulated env) as pure scannable steps.
+
+`DQNController.pretrain` used to drive the §IV-C environment with a Python
+``while not done`` loop — one `select_action` + `envs.step` + `store` +
+`train_step` dispatch chain per transition, hundreds of host round-trips
+per training run.  This module lowers whole episodes into **nested
+`lax.scan`**: the inner scan runs a fixed ``horizon`` of environment steps
+(episodes that terminate early — budget exhaustion — freeze their carry so
+the trailing steps are no-ops on exactly the state a host loop would have
+stopped at), the outer scan folds episodes, and the entire training run
+compiles to a single XLA program.
+
+The building blocks are the existing pure pieces of `repro.core.dqn`: the
+fixed-size ring-buffer `Replay` pytree (`store` wraps the write pointer
+in-jit), the epsilon schedule driven by the traced step counter (`epsilon`),
+and the periodic target sync inside `train_step_fn` (``step % target_sync``
+on a traced scalar) — none of them needed to change to become scan legs.
+
+``scan=False`` runs the *identical* step function in a Python loop (same
+key splits, same freeze semantics) — the eager reference the parity test
+pins the lowered program against.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dqn as dqn_lib
+from repro.core import envs
+
+__all__ = ["train_on_env", "episode_step"]
+
+
+class _EpCarry(NamedTuple):
+    key: jnp.ndarray
+    env: envs.EnvState
+    obs: jnp.ndarray
+    done: jnp.ndarray           # () bool: episode already terminated
+    agent: dqn_lib.DQNState
+    ret: jnp.ndarray            # () f32 undiscounted episode return
+
+
+def _freeze(done, new, old):
+    """Select ``old`` wherever the episode has already terminated, so the
+    fixed-length scan is a bitwise no-op past the terminal transition."""
+    return jax.tree.map(lambda n, o: jnp.where(done, o, n), new, old)
+
+
+def episode_step(carry: _EpCarry, cfg: dqn_lib.DQNConfig,
+                 p: envs.EnvParams) -> _EpCarry:
+    """One Alg.-1 transition: epsilon-greedy select, env step, replay store,
+    TD train.  Pure — usable as a `lax.scan` leg or in a host loop."""
+    key, ka, kt = jax.random.split(carry.key, 3)
+    a = dqn_lib.select_action(ka, carry.agent, cfg, carry.obs)
+    env, obs2, r, done2, _ = envs.step(carry.env, a, p)
+    agent = dqn_lib.store(carry.agent, carry.obs, a, r, obs2)
+    agent, _ = dqn_lib.train_step_fn(kt, agent, cfg)
+    new = _EpCarry(key=key, env=env, obs=obs2, done=carry.done | done2,
+                   agent=agent, ret=carry.ret + r)
+    return _freeze(carry.done, new, carry)
+
+
+def train_on_env(key, agent: dqn_lib.DQNState, cfg: dqn_lib.DQNConfig,
+                 p: envs.EnvParams, *, episodes: int,
+                 scan: bool = True) -> tuple:
+    """Train ``agent`` for ``episodes`` episodes of the DT env (Alg. 1).
+
+    Returns ``(agent, aux)`` with ``aux = {"ep_return": (episodes,),
+    "ep_len": (episodes,)}``.  ``scan=True`` lowers the whole run into one
+    jit-compiled nested `lax.scan` (episodes × ``p.horizon`` steps);
+    ``scan=False`` executes the same `episode_step` eagerly from Python —
+    the two are trace-identical at a fixed key
+    (tests/test_control.py::test_scanned_dqn_matches_eager).
+    """
+    def run_episode(key, agent, ep):
+        env, obs = envs.reset(jax.random.fold_in(key, ep), p)
+        carry = _EpCarry(key=key, env=env, obs=obs,
+                         done=jnp.zeros((), bool), agent=agent,
+                         ret=jnp.zeros((), jnp.float32))
+        if scan:
+            carry = jax.lax.scan(
+                lambda c, _: (episode_step(c, cfg, p), None),
+                carry, None, length=p.horizon)[0]
+        else:
+            for _ in range(p.horizon):
+                carry = episode_step(carry, cfg, p)
+        ep_len = jnp.where(carry.done, carry.env.round,
+                           jnp.asarray(p.horizon, jnp.int32))
+        return carry.key, carry.agent, carry.ret, ep_len
+
+    if scan:
+        def ep_body(carry, ep):
+            key, agent = carry
+            key, agent, ret, ep_len = run_episode(key, agent, ep)
+            return (key, agent), {"ep_return": ret, "ep_len": ep_len}
+
+        (key, agent), aux = jax.jit(
+            lambda k, ag: jax.lax.scan(ep_body, (k, ag),
+                                       jnp.arange(episodes)))(key, agent)
+        return agent, aux
+
+    rets, lens = [], []
+    for ep in range(episodes):
+        key, agent, ret, ep_len = run_episode(key, agent, ep)
+        rets.append(ret)
+        lens.append(ep_len)
+    return agent, {"ep_return": jnp.stack(rets), "ep_len": jnp.stack(lens)}

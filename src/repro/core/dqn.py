@@ -119,10 +119,13 @@ def _td_loss(eval_params, target_params, cfg: DQNConfig, batch):
     return jnp.mean((y - q_sa) ** 2)
 
 
-@functools.partial(jax.jit, static_argnums=2)
-def train_step(key, state: DQNState, cfg: DQNConfig) -> tuple:
+def train_step_fn(key, state: DQNState, cfg: DQNConfig) -> tuple:
     """One Alg.-1 learning iteration: sample replay, SGD on TD loss
-    (Eqn 18), periodic target sync.  Returns (state, loss)."""
+    (Eqn 18), periodic target sync.  Returns (state, loss).
+
+    Pure and unjitted so `repro.control.scanned_dqn` can trace it inside a
+    `lax.scan` step; `train_step` below is the jitted entry point for
+    host-driven loops."""
     rep = state.replay
     cap = rep.s.shape[0]
     limit = jnp.where(rep.full, cap, jnp.maximum(rep.ptr, 1))
@@ -143,3 +146,6 @@ def train_step(key, state: DQNState, cfg: DQNConfig) -> tuple:
         lambda t, e: jnp.where(sync, e, t), state.target_params, eval_p)
     return state._replace(eval_params=eval_p, target_params=target_p,
                           step=state.step + 1), loss
+
+
+train_step = functools.partial(jax.jit, static_argnums=2)(train_step_fn)

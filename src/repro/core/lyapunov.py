@@ -32,10 +32,19 @@ def init_queue(budget: float, horizon: int, shape=()) -> DeficitQueue:
                         budget=float(budget), horizon=int(horizon))
 
 
+def queue_advance(q, consumed, per_slot):
+    """Eqn 12 on bare arrays — the jit/scan-friendly form.
+
+    ``q`` is the backlog leaf (scalar or per-cluster), ``consumed`` the
+    realized slot cost a_i·E_cmp + E_com, ``per_slot`` the replenishment
+    beta·R_m/k.  An infinite ``per_slot`` (no budget) pins the queue at 0.
+    """
+    return jnp.maximum(q + consumed - per_slot, 0.0)
+
+
 def step_queue(queue: DeficitQueue, consumed) -> DeficitQueue:
     """Eqn 12. ``consumed`` = a_i * E_cmp + E_com for the slot."""
-    q = jnp.maximum(queue.q + consumed - queue.per_slot, 0.0)
-    return queue._replace(q=q)
+    return queue._replace(q=queue_advance(queue.q, consumed, queue.per_slot))
 
 
 def drift_penalty_reward(loss_prev, loss_cur, consumed, queue: DeficitQueue,

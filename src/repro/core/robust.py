@@ -68,6 +68,25 @@ def coordinate_median(client_params):
     return _unflat_like(jnp.median(flat, axis=0), client_params)
 
 
+def masked_coordinate_median(client_params, mask):
+    """Coordinate median over the ``mask``-valid client rows, at fixed shape.
+
+    Padded rows are replaced with +inf so an ascending sort pushes them past
+    the n valid entries; the median is then read at the traced indices
+    (n-1)//2 and n//2 of the sorted prefix — the same two-middle average
+    `jnp.median` takes on the compacted rows.  This is what lets `median`
+    join the padded fused round (`supports_mask=True`) instead of compiling
+    one exact-shape round per cluster size.
+    """
+    flat = _flat(client_params)
+    big = jnp.where(mask[:, None], flat, jnp.inf)
+    s = jnp.sort(big, axis=0)
+    n = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    lo = jnp.take(s, (n - 1) // 2, axis=0)
+    hi = jnp.take(s, n // 2, axis=0)
+    return _unflat_like(0.5 * (lo + hi), client_params)
+
+
 def trimmed_mean(client_params, beta: float = 0.2):
     """Drop the beta fraction of extremes per coordinate, then average."""
     flat = _flat(client_params)
@@ -83,4 +102,11 @@ AGGREGATORS = {
     "multi_krum": multi_krum,
     "median": coordinate_median,
     "trimmed_mean": trimmed_mean,
+}
+
+# rules with a fixed-capacity masked variant: these can run on the engine's
+# padded fixed-shape clusters (supports_mask=True) instead of forcing one
+# exact-shape compile per cluster size
+MASKED_AGGREGATORS = {
+    "median": masked_coordinate_median,
 }

@@ -1,0 +1,271 @@
+"""In-jit control plane (`repro.control`): replay ring-buffer properties,
+scanned-vs-eager Alg.-1 training parity, masked median, distilled table
+policy, and `run_scanned(K)` trace parity with the event-heap engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
+
+import repro.api as api
+import repro.control as ctl
+from repro.api import (AggregatorSpec, ControllerSpec, Federation,
+                       FederationSpec, FleetSpec)
+from repro.core import dqn as dqn_lib
+from repro.core import envs
+from repro.data import dirichlet_partition, make_classification
+
+
+def _data(n=1536, dim=48, devices=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    data = make_classification(key, n=n, dim=dim)
+    return data, dirichlet_partition(key, data.y, devices)
+
+
+def _spec(seed, controller, n_clusters=3, **kw):
+    kw.setdefault("fleet", FleetSpec(n_devices=8))
+    return FederationSpec(
+        clustering=api.ClusteringSpec(n_clusters=n_clusters),
+        controller=controller,
+        sim_seconds=1e9, local_batch=32, seed=seed, **kw)
+
+
+# --------------------------------------------------------------------- #
+# replay ring buffer (the scan's experience store)
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=40))
+def test_replay_ring_buffer_wraparound(cap, pushes):
+    """After n pushes into a capacity-cap ring, slot i holds the latest
+    value written to it (push k lands at k % cap), ptr == n % cap, and
+    full <=> n >= cap."""
+    cfg = dqn_lib.DQNConfig(buffer_size=cap, state_dim=2, n_actions=2)
+    state = dqn_lib.init_dqn(jax.random.PRNGKey(0), cfg)
+    for k in range(pushes):
+        state = dqn_lib.store(state, jnp.full((2,), k, jnp.float32),
+                              jnp.int32(k % 2), jnp.float32(k),
+                              jnp.zeros(2))
+    rep = state.replay
+    assert int(rep.ptr) == pushes % cap
+    assert bool(rep.full) == (pushes >= cap)
+    r = np.asarray(rep.r)
+    for i in range(cap):
+        wrote = [k for k in range(pushes) if k % cap == i]
+        expect = float(wrote[-1]) if wrote else 0.0
+        assert r[i] == expect, f"slot {i}: {r[i]} != {expect}"
+
+
+# --------------------------------------------------------------------- #
+# scanned Alg.-1 training == the same step function run eagerly
+# --------------------------------------------------------------------- #
+def test_scanned_dqn_matches_eager():
+    cfg = dqn_lib.DQNConfig(buffer_size=96, batch_size=16, lr=2e-3)
+    p = envs.EnvParams(horizon=10, p_good=0.5)
+    agent0 = dqn_lib.init_dqn(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    scanned, aux_s = ctl.train_on_env(key, agent0, cfg, p, episodes=2,
+                                      scan=True)
+    eager, aux_e = ctl.train_on_env(key, agent0, cfg, p, episodes=2,
+                                    scan=False)
+    assert int(scanned.step) == int(eager.step) == 20
+    np.testing.assert_array_equal(np.asarray(scanned.replay.a),
+                                  np.asarray(eager.replay.a))
+    np.testing.assert_array_equal(np.asarray(aux_s["ep_len"]),
+                                  np.asarray(aux_e["ep_len"]))
+    np.testing.assert_allclose(np.asarray(aux_s["ep_return"]),
+                               np.asarray(aux_e["ep_return"]),
+                               rtol=1e-6, atol=1e-7)
+    for k in scanned.eval_params:
+        np.testing.assert_allclose(
+            np.asarray(scanned.eval_params[k]),
+            np.asarray(eager.eval_params[k]), rtol=2e-6, atol=1e-7,
+            err_msg=f"eval_params[{k}] diverged between scan and eager")
+
+
+def test_early_termination_freezes_episode():
+    """A budget so tight the episode ends on step 1: the trailing scan steps
+    must not keep writing replay entries or stepping the agent."""
+    cfg = dqn_lib.DQNConfig(buffer_size=32, batch_size=8)
+    p = envs.EnvParams(horizon=8, budget=1e-6)     # done after 1 step
+    agent0 = dqn_lib.init_dqn(jax.random.PRNGKey(0), cfg)
+    agent, aux = ctl.train_on_env(jax.random.PRNGKey(1), agent0, cfg, p,
+                                  episodes=3, scan=True)
+    assert np.asarray(aux["ep_len"]).tolist() == [1, 1, 1]
+    assert int(agent.step) == 3                    # one TD step per episode
+    assert int(agent.replay.ptr) == 3
+
+
+# --------------------------------------------------------------------- #
+# masked median (the rule that joins the padded fused round)
+# --------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=9),
+       st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_masked_median_matches_dense(n_clients, n_valid, seed):
+    from repro.core.robust import (coordinate_median,
+                                   masked_coordinate_median)
+    n_valid = min(n_valid, n_clients)
+    rng = np.random.default_rng(seed)
+    mask = np.zeros(n_clients, bool)
+    mask[rng.choice(n_clients, n_valid, replace=False)] = True
+    tree = {"w": jnp.asarray(rng.normal(size=(n_clients, 5, 2)),
+                             jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n_clients, 4)), jnp.float32)}
+    got = masked_coordinate_median(tree, jnp.asarray(mask))
+    dense = coordinate_median(
+        jax.tree.map(lambda l: l[np.where(mask)[0]], tree))
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]),
+                                   np.asarray(dense[k]), atol=1e-6)
+
+
+def test_median_joins_padded_fused_round():
+    data, parts = _data(seed=3)
+    spec = _spec(3, ControllerSpec("fixed", {"a": 3}),
+                 n_clusters=2, aggregator=AggregatorSpec("median"),
+                 fleet=FleetSpec(n_devices=8, malicious_frac=0.25))
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    assert fed.engine._padded            # one compile, not one per size
+    trace = fed.run(eval_every=1.0, max_rounds=12)
+    assert trace.records and all(np.isfinite(r.loss) for r in trace.records)
+
+
+# --------------------------------------------------------------------- #
+# run_scanned(K) == event-heap run at a fixed seed
+# --------------------------------------------------------------------- #
+def _assert_trace_parity(spec, data, parts, K, controller=None):
+    mk = (lambda: None) if controller is None else controller
+    event = Federation.from_spec(spec, data=data, parts=parts,
+                                 controller=mk()).run(
+        eval_every=0.0, max_rounds=K)        # record every round
+    scanned = Federation.from_spec(spec, data=data, parts=parts,
+                                   controller=mk())
+    tr = scanned.engine.run_scanned(K)
+    rows = tr.records[:K]
+    assert len(event.records) == K and len(tr.records) == K + 1
+    # scheduling and counters: bit-for-bit
+    assert [r.cluster for r in event.records] == [r.cluster for r in rows]
+    assert [r.a for r in event.records] == [r.a for r in rows]
+    assert [r.agg_count for r in event.records] == \
+           [r.agg_count for r in rows]
+    # float reductions: to the ulp (f32 event-time accumulation in the
+    # scan vs the heap's f64 python floats)
+    np.testing.assert_allclose(event.times, [r.t for r in rows], rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(event.energies, [r.energy for r in rows],
+                               rtol=1e-6)
+    return scanned
+
+
+def test_run_scanned_parity_fixed_controller():
+    data, parts = _data(seed=9)
+    spec = _spec(9, ControllerSpec("fixed", {"a": 4}))
+    _assert_trace_parity(spec, data, parts, K=14)
+
+
+def test_run_scanned_parity_lyapunov_controller():
+    data, parts = _data(seed=11)
+    spec = _spec(11, ControllerSpec("lyapunov",
+                                    {"budget": 600.0, "horizon": 60}))
+    fed = _assert_trace_parity(spec, data, parts, K=14)
+    # the deficit queue lives in FleetState and the host controller adopted
+    # it after the scan
+    q_leaf = float(fed.engine.state.queue)
+    assert q_leaf == float(fed.engine.controller.queue.q)
+
+
+def test_run_scanned_parity_dqn_controller():
+    """The needs_obs=True branch: in-scan `_scan_obs` + `dqn_policy` pick
+    the same actions as the host `_obs` + `DQNController.select` (both run
+    the same jnp observation builder and greedy head)."""
+    from repro.api.components import DQNController
+    data, parts = _data(seed=13)
+    ctl = DQNController.pretrain(seed=0, episodes=1, horizon=8)
+    spec = _spec(13, ControllerSpec("fixed", {"a": 3}))   # overridden below
+    _assert_trace_parity(spec, data, parts, K=10,
+                         controller=lambda: DQNController(ctl.agent,
+                                                          ctl.cfg))
+
+
+def test_scanned_queue_leaf_matches_host_queue():
+    """Event-heap run: the in-jit Eqn-12 leaf advances with the realized
+    consumption exactly as the host controller's observe() does."""
+    data, parts = _data(seed=5)
+    spec = _spec(5, ControllerSpec("lyapunov",
+                                   {"budget": 200.0, "horizon": 40}))
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    fed.run(eval_every=1e9, max_rounds=10)
+    assert float(fed.engine.state.queue) == \
+           float(fed.engine.controller.queue.q)
+
+
+def test_run_scanned_rejects_exact_shape_aggregators():
+    data, parts = _data(seed=2)
+    spec = _spec(2, ControllerSpec("fixed", {"a": 2}), n_clusters=2,
+                 aggregator=AggregatorSpec("trimmed_mean"))
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    with pytest.raises(ValueError, match="supports_mask=False"):
+        fed.engine.run_scanned(4)
+
+
+def test_spec_execution_field():
+    with pytest.raises(ValueError, match="unknown execution"):
+        FederationSpec(execution="warp").validate()
+    with pytest.raises(ValueError, match="no masked variant"):
+        FederationSpec(execution="scanned",
+                       aggregator=AggregatorSpec("krum")).validate()
+    with pytest.raises(ValueError, match="device-scale only"):
+        FederationSpec(execution="scanned", scale=api.DATACENTER_SCALE,
+                       task=api.TaskSpec("lm")).validate()
+    # spec-driven scanned run through the facade
+    data, parts = _data(seed=4)
+    spec = _spec(4, ControllerSpec("fixed", {"a": 2}), n_clusters=2,
+                 execution="scanned", rounds=6)
+    trace = Federation.from_spec(spec, data=data, parts=parts).run()
+    assert len(trace.records) == 7           # 6 rounds + final eval
+    assert trace.records[-1].acc is not None
+    assert "adaptive-scanned" in api.SCENARIOS
+
+
+# --------------------------------------------------------------------- #
+# policies
+# --------------------------------------------------------------------- #
+def _obs(loss=1.0, rnd=0, good=1.0, queue=0.0, obs48=None):
+    return ctl.CtlObs(
+        round=jnp.int32(rnd), cluster=jnp.int32(0),
+        queue=jnp.float32(queue), cluster_loss=jnp.float32(loss),
+        cluster_freq=jnp.float32(1.0), mean_freq=jnp.float32(1.0),
+        channel_good_frac=jnp.float32(good), energy_used=jnp.float32(0.0),
+        dqn_obs=jnp.zeros(48) if obs48 is None else obs48)
+
+
+def test_lyapunov_policy_backs_off_under_deficit():
+    pol = ctl.lyapunov_policy(n_actions=10)
+    a_free, _ = pol.step(pol.state, _obs(loss=2.0, queue=0.0))
+    a_broke, _ = pol.step(pol.state, _obs(loss=2.0, queue=1e4))
+    assert int(a_broke) == 1 <= int(a_free)
+    assert int(a_free) > 1               # no deficit: invest in training
+
+
+def test_table_policy_matches_dqn_on_grid_points():
+    cfg = dqn_lib.DQNConfig()
+    agent = dqn_lib.init_dqn(jax.random.PRNGKey(7), cfg)
+    table = ctl.distill_table(agent.eval_params, loss_bins=6, round_bins=4,
+                              good_bins=3)
+    dqn = ctl.dqn_policy(agent.eval_params)
+    tab = ctl.table_policy(table)
+    from repro.control.policy import _grid_obs
+    for i, loss in enumerate(np.asarray(table.loss_grid)):
+        g = float(table.good_grid[0])
+        o = _grid_obs(jnp.float32(loss), jnp.float32(0.0), jnp.float32(g),
+                      loss_max=2.3, horizon=100.0)
+        a_net, _ = dqn.step(dqn.state, _obs(loss=loss, rnd=0, good=g,
+                                            obs48=o))
+        a_tab, _ = tab.step(tab.state, _obs(loss=loss, rnd=0, good=g))
+        assert int(a_tab) == int(a_net) == int(table.table[i, 0, 0])
