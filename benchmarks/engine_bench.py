@@ -29,12 +29,22 @@ old computation (different batch sampler), timed on the same workload.
 number is the headline: it is the adaptive-frequency path with zero
 per-round host syncs.
 
+``--sharded`` benches the placement layer: the same `run_scanned(K)`
+workload on the single-device fallback vs a `ShardingSpec(mesh=(M,))`
+host mesh (default M=8; force a CPU device pool with
+XLA_FLAGS=--xla_force_host_platform_device_count=M).  On one physical CPU
+the mesh adds partitioning/collective overhead rather than speed — the
+recorded ratio is the cost of the placement plumbing at n_devices >= 256,
+the configuration real multi-host meshes scale capacity with.
+
     PYTHONPATH=src python benchmarks/engine_bench.py            # full
     PYTHONPATH=src python benchmarks/engine_bench.py --fast     # CI smoke
     PYTHONPATH=src python benchmarks/engine_bench.py --scanned  # scan bench
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/engine_bench.py --sharded
 
-Full runs write BENCH_engine_throughput.json / BENCH_engine_scan.json at
-the repo root.
+Full runs write BENCH_engine_throughput.json / BENCH_engine_scan.json /
+BENCH_engine_shard.json at the repo root.
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import (AggregatorSpec, ClusteringSpec, ControllerSpec,
-                       Federation, FederationSpec, FleetSpec,
+                       Federation, FederationSpec, FleetSpec, ShardingSpec,
                        WeightedAggregator)
 from repro.api.engine import _flatten_params
 from repro.core.clustering import (cluster_devices, ensure_nonempty,
@@ -317,9 +327,83 @@ def run_scan_bench(args):
     return 0
 
 
+def bench_placement(mesh, *, n_devices, n_clusters, rounds, data, parts,
+                    local_batch=8, seed=0):
+    """Rounds/sec of run_scanned(K) under a given placement (mesh shape;
+    () = the single-device fallback)."""
+    spec = FederationSpec(
+        fleet=FleetSpec(n_devices=n_devices),
+        clustering=ClusteringSpec(n_clusters=n_clusters),
+        controller=ControllerSpec("fixed", {"a": 3}),
+        aggregator=AggregatorSpec("trust"),
+        execution="scanned", rounds=rounds, sim_seconds=1e9,
+        local_batch=local_batch, seed=seed,
+        sharding=ShardingSpec(mesh=mesh))
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    fed.engine.run_scanned(rounds, eval_final=False)     # compile + warm
+    dt = min(_timed(lambda: fed.engine.run_scanned(rounds,
+                                                   eval_final=False))
+             for _ in range(3))
+    return rounds / dt
+
+
+def run_shard_bench(args):
+    mesh = (args.mesh_size,)
+    if jax.device_count() < args.mesh_size:
+        print(f"error: --sharded needs {args.mesh_size} devices, backend "
+              f"exposes {jax.device_count()}; run under XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={args.mesh_size}")
+        return 2
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, n=args.samples, dim=args.dim)
+    parts = dirichlet_partition(key, data.y, args.devices)
+    kw = dict(n_devices=args.devices, n_clusters=args.clusters,
+              rounds=args.rounds, data=data, parts=parts,
+              local_batch=args.local_batch)
+
+    single = bench_placement((), **kw)
+    sharded = bench_placement(mesh, **kw)
+    print(f"engine,single_device_rounds_per_sec,{single:.2f}")
+    print(f"engine,sharded_mesh{args.mesh_size}_rounds_per_sec,"
+          f"{sharded:.2f}")
+    print(f"engine,sharded_vs_single_ratio,{sharded / single:.2f}x "
+          f"(n_devices={args.devices}, mesh={mesh})")
+
+    if not args.fast:
+        payload = {
+            "bench": "DeviceScaleEngine run_scanned rounds/sec: "
+                     "ShardingSpec mesh placement vs the single-device "
+                     "fallback",
+            "note": "sharded = FleetState device/cluster leaf groups "
+                    "partitioned over a host-device mesh via jit "
+                    "in_shardings/out_shardings (zero per-round host "
+                    "syncs, trace parity with single-device); on one "
+                    "physical CPU the forced host pool measures placement "
+                    "overhead (collectives between shards of the same "
+                    "chip), not a speedup — the mesh exists for multi-host "
+                    "capacity scaling",
+            "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+            "device": str(jax.devices()[0]),
+            "device_count": jax.device_count(),
+            "mesh": list(mesh),
+            "n_devices": args.devices,
+            "n_clusters": args.clusters,
+            "rounds_measured": args.rounds,
+            "local_batch": args.local_batch,
+            "dim": args.dim,
+            "single_device_rounds_per_sec": round(single, 2),
+            "sharded_rounds_per_sec": round(sharded, 2),
+            "sharded_vs_single_ratio": round(sharded / single, 2),
+        }
+        with open(args.shard_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.shard_out}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--devices", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=None)
     ap.add_argument("--clusters", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--warmup", type=int, default=10)
@@ -339,22 +423,35 @@ def main(argv=None):
     ap.add_argument("--scanned", action="store_true",
                     help="bench run_scanned(K) vs the per-event fused path "
                          "(fixed and dqn controllers)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="bench run_scanned(K) on a ShardingSpec mesh vs "
+                         "the single-device fallback (needs a device pool; "
+                         "see module docstring)")
+    ap.add_argument("--mesh-size", type=int, default=8)
     ap.add_argument("--out", default="BENCH_engine_throughput.json")
     ap.add_argument("--scan-out", default="BENCH_engine_scan.json")
+    ap.add_argument("--shard-out", default="BENCH_engine_shard.json")
     args = ap.parse_args(argv)
     # per-mode defaults (any explicit flag wins)
-    scan_defaults = dict(clusters=16, rounds=150, samples=2048, dim=32,
-                         local_batch=8)
-    full_defaults = dict(clusters=8, rounds=100, samples=4096, dim=128,
-                         local_batch=64)
-    for name, val in (scan_defaults if args.scanned
-                      else full_defaults).items():
+    scan_defaults = dict(devices=64, clusters=16, rounds=150, samples=2048,
+                         dim=32, local_batch=8)
+    shard_defaults = dict(devices=256, clusters=16, rounds=60, samples=4096,
+                          dim=32, local_batch=8)
+    full_defaults = dict(devices=64, clusters=8, rounds=100, samples=4096,
+                         dim=128, local_batch=64)
+    mode_defaults = (shard_defaults if args.sharded
+                     else scan_defaults if args.scanned else full_defaults)
+    for name, val in mode_defaults.items():
         if getattr(args, name) is None:
             setattr(args, name, val)
     if args.fast:
         args.devices, args.clusters = 16, 2
         args.rounds, args.warmup = 8, 3
         args.samples, args.dim = 1024, 64
+        if args.sharded:
+            args.devices, args.clusters = 32, 4
+    if args.sharded:
+        return run_shard_bench(args)
     if args.scanned:
         return run_scan_bench(args)
 

@@ -33,4 +33,11 @@ echo "== scanned scenario CLI =="
 python -m repro.api.run --scenario adaptive-scanned --rounds 6 \
     --devices 8 --clusters 2 | tail -n 3
 
+echo "== sharded placement (8-way forced host mesh) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/engine_bench.py --sharded --fast
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.api.run --scenario adaptive-scanned --rounds 6 \
+    --devices 8 --clusters 2 --mesh 8 | tail -n 3
+
 echo "smoke OK"

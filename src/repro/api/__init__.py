@@ -5,11 +5,16 @@
     trace = Federation.from_spec(FederationSpec()).run()
 
 Layers:
-  spec        declarative `FederationSpec` tree (+ dict round-trip)
+  spec        declarative `FederationSpec` tree (+ dict round-trip),
+              including `ShardingSpec` — *where* a federation runs
   registry    named component registries with decorator registration
+              (aggregators, controllers, tasks, scenarios, engines)
   components  aggregators (Eqn 6 / robust), controllers (fixed / DQN /
               Lyapunov-greedy), task adapters (mlp / lm)
-  engine      device-scale discrete-event simulator + datacenter fl_step
+  placement   `ShardingSpec` -> `jax.sharding` mesh + per-leaf-group
+              NamedShardings (single-device fallback by default)
+  engine      the `Engine` protocol + built-ins: device-scale
+              discrete-event simulator, datacenter fl_step
   records     one `RoundRecord`/`FLTrace` schema for both scales
   run         `python -m repro.api.run --scenario ...` CLI presets
 
@@ -19,26 +24,29 @@ Legacy entry points (`repro.core.AsyncFederation`, `run_sync_baseline`,
 from .components import (ControllerCtx, DQNController, FixedController,
                          LMTask, LyapunovGreedyController, MLPTask,
                          RobustAggregator, WeightedAggregator)
-from .engine import FleetState
+from .engine import DatacenterEngine, DeviceScaleEngine, Engine, FleetState
 from .federation import Federation
+from .placement import Placement, SINGLE_DEVICE, resolve as resolve_placement
 from .records import FLTrace, RoundRecord
-from .registry import (AGGREGATORS, CONTROLLERS, SCENARIOS, TASKS,
+from .registry import (AGGREGATORS, CONTROLLERS, ENGINES, SCENARIOS, TASKS,
                        register_aggregator, register_controller,
-                       register_scenario, register_task)
+                       register_engine, register_scenario, register_task)
 from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
                    ControllerSpec, DATACENTER_SCALE, DEVICE_SCALE,
-                   FederationSpec, FleetSpec, PrivacySpec, TaskSpec,
-                   legacy_spec)
+                   FederationSpec, FleetSpec, PrivacySpec, ShardingSpec,
+                   TaskSpec, legacy_spec)
 from . import scenarios  # noqa: F401  (populates SCENARIOS presets)
 
 __all__ = [
     "Federation", "FederationSpec", "FleetState", "FLTrace", "RoundRecord",
     "FleetSpec", "ClusteringSpec", "ControllerSpec", "AggregatorSpec",
-    "TaskSpec", "PrivacySpec", "ChannelSpec", "legacy_spec",
+    "TaskSpec", "PrivacySpec", "ChannelSpec", "ShardingSpec", "legacy_spec",
     "DEVICE_SCALE", "DATACENTER_SCALE",
-    "AGGREGATORS", "CONTROLLERS", "TASKS", "SCENARIOS",
-    "register_aggregator", "register_controller", "register_task",
-    "register_scenario",
+    "Engine", "DeviceScaleEngine", "DatacenterEngine",
+    "Placement", "SINGLE_DEVICE", "resolve_placement",
+    "AGGREGATORS", "CONTROLLERS", "ENGINES", "TASKS", "SCENARIOS",
+    "register_aggregator", "register_controller", "register_engine",
+    "register_task", "register_scenario",
     "WeightedAggregator", "RobustAggregator", "FixedController",
     "DQNController", "LyapunovGreedyController", "MLPTask", "LMTask",
     "ControllerCtx",

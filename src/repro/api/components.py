@@ -50,7 +50,8 @@ from repro.core.robust import AGGREGATORS as ROBUST_RULES
 from repro.core.robust import MASKED_AGGREGATORS as MASKED_RULES
 from repro.core.trust import trust_weighted_average
 from repro.core.twin import calibrated_freq
-from repro.kernels.ops import INTERPRET, trust_aggregate_tree
+from repro.kernels.ops import (INTERPRET, trust_aggregate_global_tree,
+                               trust_aggregate_tree)
 
 from .registry import (register_aggregator, register_controller,
                        register_task)
@@ -85,15 +86,20 @@ class WeightedAggregator:
     def __init__(self, uniform: bool = False, use_kernel: bool = True):
         self.uniform = uniform
         self.use_kernel = use_kernel
+        # the kernel path can fold the Eqn-19 global average into the same
+        # grid pass (`aggregate_with_global`); the engine consults this
+        self.supports_fused_global = use_kernel
+
+    def _effective_weights(self, weights, mask):
+        if not self.uniform:
+            return weights
+        if mask is None:
+            return jnp.full_like(weights, 1.0 / weights.shape[0])
+        m = mask.astype(weights.dtype)
+        return m / jnp.maximum(jnp.sum(m), 1.0)
 
     def __call__(self, client_params, weights, mask=None):
-        if self.uniform:
-            if mask is None:
-                n = weights.shape[0]
-                weights = jnp.full_like(weights, 1.0 / n)
-            else:
-                m = mask.astype(weights.dtype)
-                weights = m / jnp.maximum(jnp.sum(m), 1.0)
+        weights = self._effective_weights(weights, mask)
         if self.use_kernel:
             return trust_aggregate_tree(client_params, weights, mask,
                                         interpret=INTERPRET)
@@ -101,14 +107,25 @@ class WeightedAggregator:
             weights = weights * mask.astype(weights.dtype)
         return trust_weighted_average(client_params, weights)
 
+    def aggregate_with_global(self, client_params, weights, mask,
+                              cluster_stack, staleness_w, c):
+        """Fused Eqn 6 + Eqn 19: member updates -> the post-round global
+        model in one `trust_aggregate_global` kernel pass (the Eqn-6
+        aggregate replaces row ``c`` of the stacked cluster parameters
+        in-VMEM before the staleness-weighted average)."""
+        weights = self._effective_weights(weights, mask)
+        return trust_aggregate_global_tree(
+            client_params, weights, mask, cluster_stack, staleness_w, c,
+            interpret=INTERPRET)
+
 
 class RobustAggregator:
     """Byzantine-robust rules from repro.core.robust; ignores trust weights
     (that is their point: no reputation signal needed).  Rules with a
-    fixed-capacity masked variant (`median`, via the ±inf-padded sort in
-    `robust.masked_coordinate_median`) advertise ``supports_mask=True`` and
+    fixed-capacity masked variant (`median` / `trimmed_mean`, via the
+    ±inf-padded sorts in `robust`) advertise ``supports_mask=True`` and
     join the engine's padded fused round; the remaining rank statistics
-    (krum, trimmed mean) run on exact-shape clusters — one compile per
+    (krum, multi-krum) run on exact-shape clusters — one compile per
     distinct cluster size."""
 
     def __init__(self, rule: str, **kw):

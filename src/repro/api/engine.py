@@ -1,5 +1,20 @@
 """Execution engines behind the `Federation` facade.
 
+The engine contract is explicit: the `Engine` protocol below (a
+``from_spec`` classmethod taking the spec plus built component instances,
+``run``, ``run_scanned``, one `FLTrace`/`RoundRecord` schema), and engines
+register under `repro.api.registry.ENGINES` keyed by ``spec.scale`` —
+`Federation` resolves the scale like any other component.
+
+*Where* an engine runs is spec data too: `DeviceScaleEngine` resolves
+``spec.sharding`` through `repro.api.placement` and, when a mesh is
+present, commits the initial `FleetState` to its leaf-group shardings and
+pins jit ``in_shardings``/``out_shardings`` on both the per-event fused
+round and the whole ``run_scanned`` scan (device leaves over the fleet
+axis, cluster stack + event times over the cluster axis, scalars/global
+model replicated).  The single-device default builds exactly the
+pre-placement jits.
+
 `DeviceScaleEngine` is the paper's §IV-D discrete-event simulator rebuilt
 around an immutable **`FleetState`** struct-of-arrays pytree: twins,
 reputation, channel, stacked per-cluster parameters, energy, the global
@@ -68,7 +83,7 @@ the same controller protocol and emits the same `RoundRecord` trace.
 from __future__ import annotations
 
 import heapq
-from typing import Any, NamedTuple, Optional
+from typing import (Any, NamedTuple, Optional, Protocol, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -81,21 +96,62 @@ from repro.core.clustering import (cluster_devices, ensure_nonempty,
 from repro.core.energy import channel_transition, round_energy, step_channel
 from repro.core.envs import OBS_DIM
 from repro.core.trust import (belief, gradient_diversity, learning_quality,
-                              time_weighted_average, trust_weights,
-                              update_reputation)
+                              staleness_weights, time_weighted_average,
+                              trust_weights, update_reputation)
 from repro.core.twin import (calibrate, calibrated_freq, init_twins,
                              member_view, observe_round_members,
                              sample_deviation, TwinState)
 from repro.data.federated import padded_partition, sample_member_batch
 
+from . import placement as placement_lib
 from .components import ControllerCtx
 from .records import FLTrace, RoundRecord
-from .spec import DEVICE_SCALE, FederationSpec
+from .registry import register_engine
+from .spec import DATACENTER_SCALE, DEVICE_SCALE, FederationSpec
 
 
 def _flatten_params(tree):
     return jnp.concatenate([x.reshape(x.shape[0], -1)
                             for x in jax.tree.leaves(tree)], axis=1)
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """The execution-engine contract behind `Federation`.
+
+    An engine registers under `repro.api.registry.ENGINES` keyed by
+    ``FederationSpec.scale`` and provides:
+
+      from_spec   classmethod constructor taking the spec plus built
+                  component instances (``controller``/``aggregator``/
+                  ``task``) and the optional ``data``/``parts``/``fused``
+                  overrides; engines that generate their own data ignore
+                  the overrides they don't consume.
+      run         the engine's native loop; emits the `FLTrace` /
+                  `RoundRecord` schema shared by every scale.
+      run_scanned exactly-K-rounds lowering with end-of-run metrics sync;
+                  engines without one raise ValueError with a pointer to
+                  ``run``.
+
+    `Federation` resolves ``spec.scale`` through the registry and calls
+    only this surface — adding a scale is a registration, not a facade
+    edit.
+    """
+
+    spec: FederationSpec
+
+    @classmethod
+    def from_spec(cls, spec: FederationSpec, *, controller, aggregator,
+                  task, data=None, parts=None,
+                  fused: Optional[bool] = None) -> "Engine":
+        ...
+
+    def run(self, eval_every: float = 1.0,
+            max_rounds: Optional[int] = None) -> FLTrace:
+        ...
+
+    def run_scanned(self, K: int, *, eval_final: bool = True) -> FLTrace:
+        ...
 
 
 class FleetState(NamedTuple):
@@ -128,6 +184,11 @@ class DeviceScaleEngine:
         self.controller = controller
         self.aggregator = aggregator
         self.task = task
+        # where the fleet lives: a jax.sharding mesh resolved from the
+        # spec, or the single-device fallback (shardings all None)
+        self.placement = placement_lib.resolve(
+            spec.sharding, n_devices=spec.fleet.n_devices,
+            n_clusters=spec.clustering.n_clusters)
 
         n = spec.fleet.n_devices
         C = spec.clustering.n_clusters
@@ -151,13 +212,13 @@ class DeviceScaleEngine:
         gp = task.init(kp, dim=data.x.shape[1])
         cparams = jax.tree.map(
             lambda l: jnp.broadcast_to(l[None], (C,) + l.shape) + 0.0, gp)
-        self.state = FleetState(
+        self.state = self.placement.shard_state(FleetState(
             twins=twins, rep=jnp.ones((n,)),
             channel=jnp.zeros((n,), jnp.int32),
             cluster_params=cparams, global_params=gp,
             cluster_ts=jnp.zeros((C,), jnp.float32),
             queue=ctl_queue.init_leaf(),
-            round=jnp.zeros((), jnp.int32), key=key0)
+            round=jnp.zeros((), jnp.int32), key=key0))
         # Eqn-12 replenishment rate of the controller's deficit queue
         # (+inf for budgetless controllers: the queue leaf stays 0)
         self._queue_per_slot = ctl_queue.per_slot_of(controller)
@@ -180,12 +241,27 @@ class DeviceScaleEngine:
                                          jnp.int32) for c in range(C)]
             self._masks = [jnp.ones((len(g),), bool) for g in self._members]
 
+        # aggregators exposing the fused Eqn-6+19 kernel path
+        # (`aggregate_with_global`) fold the global average into the same
+        # pass when the round is padded and DP is off
+        self._fused_global = self._padded and bool(
+            getattr(aggregator, "supports_fused_global", False))
+
         self.fused = True if fused is None else bool(fused)
         # donate the FleetState buffers so the round updates in place
         # (CPU ignores donation and warns, so only request it elsewhere)
         donate = (0,) if jax.default_backend() != "cpu" else ()
+        jit_kw = dict(donate_argnums=donate)
+        if self.placement.is_sharded:
+            # pin the round's output placement so the FleetState carry keeps
+            # its leaf-group shardings instead of drifting to whatever the
+            # SPMD partitioner last inferred; the 4 metrics scalars replicate
+            repl = self.placement.replicated()
+            jit_kw["out_shardings"] = (
+                self.placement.state_shardings(self.state),
+                {"a": repl, "dur": repl, "consumed": repl, "loss": repl})
         self._round_fn = (
-            jax.jit(self._fleet_round, donate_argnums=donate)
+            jax.jit(self._fleet_round, **jit_kw)
             if self.fused else self._fleet_round)
         self._rounds = 0
         # cumulative energy accumulates host-side in float64 (the per-round
@@ -198,6 +274,16 @@ class DeviceScaleEngine:
         self._obs_fn = jax.jit(lambda state, c: self._scan_obs(
             state, c, self._ctl_features(state, c)))
         self._scan_cache = {}       # K -> compiled lax.scan-over-rounds
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_spec(cls, spec: FederationSpec, *, controller, aggregator,
+                  task, data=None, parts=None,
+                  fused: Optional[bool] = None) -> "DeviceScaleEngine":
+        if data is None or parts is None:
+            data, parts = default_device_data(spec)
+        return cls(spec, data, parts, controller=controller,
+                   aggregator=aggregator, task=task, fused=fused)
 
     # ------------------------------------------------------------------ #
     # the fused round: everything below runs inside one jit call
@@ -273,17 +359,23 @@ class DeviceScaleEngine:
             spec.channel.pkt_fail, spec.iota)
         rep = state.rep.at[members].set(rep_m, mode="drop")
         w = trust_weights(rep_m, mask)
-        agg = (self.aggregator(new, w, mask) if self._padded
-               else self.aggregator(new, w))
-        if spec.privacy.clip > 0.0:
-            from repro.core.privacy import dp_aggregate
-            cur = jax.tree.map(lambda l: l[c], state.cluster_params)
-            agg = dp_aggregate(
-                kdp, new, cur,
-                w if spec.aggregator.kind == "trust" else mask_f / cnt,
-                spec.privacy.clip, spec.privacy.noise, n_clients=cnt)
-        cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
-                               state.cluster_params, agg)
+        # with a fused-global aggregator the Eqn-6 aggregate never leaves
+        # the kernel (see the Eqn-19 block below); DP needs the bare
+        # aggregate to clip against, so it keeps the two-step path
+        fuse_global = self._fused_global and spec.privacy.clip <= 0.0
+        if not fuse_global:
+            agg = (self.aggregator(new, w, mask) if self._padded
+                   else self.aggregator(new, w))
+            if spec.privacy.clip > 0.0:
+                from repro.core.privacy import dp_aggregate
+                cur = jax.tree.map(lambda l: l[c], state.cluster_params)
+                agg = dp_aggregate(
+                    kdp, new, cur,
+                    w if spec.aggregator.kind == "trust" else mask_f / cnt,
+                    spec.privacy.clip, spec.privacy.noise, n_clients=cnt)
+            cparams = jax.tree.map(
+                lambda L, g: L.at[c].set(g.astype(L.dtype)),
+                state.cluster_params, agg)
 
         # --- losses, energy (Eqns 7-8), twins
         losses = task.losses(new, batch)
@@ -301,8 +393,18 @@ class DeviceScaleEngine:
         # --- Eqn 19: staleness-weighted global aggregate (async pull)
         rnd = state.round + 1
         ts = state.cluster_ts.at[c].set(rnd.astype(jnp.float32))
-        gparams, _ = time_weighted_average(cparams,
-                                           rnd.astype(jnp.float32) - ts)
+        if fuse_global:
+            # one kernel pass: Eqn-6 reduction of the member updates +
+            # substitution into the cluster stack + the Eqn-19 average
+            # ((n_clusters + C, BLOCK) tiles per grid step; the per-shard
+            # unit under a mesh placement)
+            gparams = self.aggregator.aggregate_with_global(
+                new, w, mask, state.cluster_params,
+                staleness_weights(rnd.astype(jnp.float32) - ts), c)
+            cparams = state.cluster_params
+        else:
+            gparams, _ = time_weighted_average(cparams,
+                                               rnd.astype(jnp.float32) - ts)
         cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
                                cparams, gparams)
 
@@ -436,7 +538,20 @@ class DeviceScaleEngine:
                                 length=K)
 
         donate = (0,) if jax.default_backend() != "cpu" else ()
-        return jax.jit(run_k, donate_argnums=donate)
+        jit_kw = dict(donate_argnums=donate)
+        if self.placement.is_sharded:
+            # carry: FleetState by leaf group, the per-cluster event-time
+            # vector with the cluster stack, policy carry + energy tally
+            # replicated; the K stacked metrics replicate (synced once)
+            repl = self.placement.replicated()
+            carry_sh = (self.placement.state_shardings(self.state),
+                        self.placement.sharding(self.placement.cluster_axis),
+                        self.placement.tree_replicated(pol.state), repl)
+            ys_sh = {k: repl for k in ("t", "cluster", "a", "dur",
+                                       "consumed", "loss")}
+            jit_kw.update(in_shardings=carry_sh,
+                          out_shardings=(carry_sh, ys_sh))
+        return jax.jit(run_k, **jit_kw)
 
     def run_scanned(self, K: int, *, eval_final: bool = True) -> FLTrace:
         """Run exactly K asynchronous cluster rounds as one `lax.scan`.
@@ -588,6 +703,16 @@ class DatacenterEngine:
     (synchronous pods) unless the spec says otherwise.
     """
 
+    @classmethod
+    def from_spec(cls, spec: FederationSpec, *, controller, aggregator=None,
+                  task, data=None, parts=None,
+                  fused: Optional[bool] = None) -> "DatacenterEngine":
+        # Eqn-6 trust weighting lives inside the jit-ed fl_step, and the
+        # task adapter generates its own token batches: the aggregator
+        # instance and the device-scale data/fused overrides are unused
+        del aggregator, data, parts, fused
+        return cls(spec, controller=controller, task=task)
+
     def __init__(self, spec: FederationSpec, *, controller, task):
         from repro.core import fl_step
         from repro.optim import adam
@@ -645,3 +770,27 @@ class DatacenterEngine:
                 t=float(i), round=i + 1, cluster=-1, a=a, loss=loss,
                 acc=None, energy=0.0, agg_count=i + 1))
         return trace
+
+    def run_scanned(self, K: int, *, eval_final: bool = True) -> FLTrace:
+        raise ValueError(
+            "the datacenter engine has no scanned lowering (its round loop "
+            "is already a fixed-shape jit step per round); use run()")
+
+
+def default_device_data(spec: FederationSpec):
+    """Synthetic non-IID federated data from the task params (the
+    device-scale default when `from_spec` gets no data/parts override)."""
+    from repro.data import dirichlet_partition, make_classification
+    p = spec.task.params
+    key = jax.random.PRNGKey(spec.seed)
+    data = make_classification(key, n=p.get("n_samples", 4096),
+                               dim=p.get("dim", 784))
+    parts = dirichlet_partition(key, data.y, spec.fleet.n_devices,
+                                alpha=p.get("dirichlet_alpha", 0.5))
+    return data, parts
+
+
+# `scale` resolves through the same registry mechanism as every other
+# component; a new execution scale is a registration, not a facade edit
+register_engine(DEVICE_SCALE)(DeviceScaleEngine)
+register_engine(DATACENTER_SCALE)(DatacenterEngine)

@@ -7,16 +7,19 @@
 
 Component instances built from the registries can be overridden with live
 objects (e.g. a DQN agent you trained yourself) via keyword arguments.
+
+The facade holds no per-scale code: ``spec.scale`` is a key into the
+`ENGINES` registry and every engine is constructed through the uniform
+`Engine.from_spec` protocol (see `repro.api.engine`), so registering a new
+engine class makes it reachable from specs, config files, and the CLI
+without touching this module.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-
 from . import registry
+from .engine import Engine  # noqa: F401  (re-export; also populates ENGINES)
 from .records import FLTrace
-from .spec import DATACENTER_SCALE, DEVICE_SCALE, FederationSpec
+from .spec import DEVICE_SCALE, FederationSpec
 
 
 class Federation:
@@ -35,20 +38,9 @@ class Federation:
             spec.aggregator.kind)(params)
         self.task = task or registry.TASKS.get(spec.task.kind)(
             spec.task.params)
-
-        if spec.scale == DEVICE_SCALE:
-            from .engine import DeviceScaleEngine
-            if data is None or parts is None:
-                data, parts = _default_device_data(spec)
-            self.engine = DeviceScaleEngine(
-                spec, data, parts, controller=self.controller,
-                aggregator=self.aggregator, task=self.task, fused=fused)
-        elif spec.scale == DATACENTER_SCALE:
-            from .engine import DatacenterEngine
-            self.engine = DatacenterEngine(
-                spec, controller=self.controller, task=self.task)
-        else:
-            raise ValueError(spec.scale)
+        self.engine: Engine = registry.ENGINES.get(spec.scale).from_spec(
+            spec, controller=self.controller, aggregator=self.aggregator,
+            task=self.task, data=data, parts=parts, fused=fused)
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -69,15 +61,3 @@ class Federation:
         if name == "engine":                 # not yet set: avoid recursion
             raise AttributeError(name)
         return getattr(self.engine, name)
-
-
-def _default_device_data(spec: FederationSpec):
-    """Synthetic non-IID federated data from the task params."""
-    from repro.data import dirichlet_partition, make_classification
-    p = spec.task.params
-    key = jax.random.PRNGKey(spec.seed)
-    data = make_classification(key, n=p.get("n_samples", 4096),
-                               dim=p.get("dim", 784))
-    parts = dirichlet_partition(key, data.y, spec.fleet.n_devices,
-                                alpha=p.get("dirichlet_alpha", 0.5))
-    return data, parts

@@ -1,0 +1,124 @@
+"""Placement: resolve a `ShardingSpec` into concrete device placement.
+
+*Where* a federation runs is spec data like everything else
+(`FederationSpec.sharding`); this module turns that data into a
+`Placement` — a `jax.sharding.Mesh` plus one `NamedSharding` per
+`FleetState` leaf *group*:
+
+  device group      leaves with leading dim n_devices (twins, rep,
+                    channel), partitioned over ``device_axis``
+  cluster group     leaves with leading dim n_clusters (the stacked
+                    per-cluster parameters, cluster timestamps, and the
+                    scan's per-cluster event-time vector), partitioned
+                    over ``cluster_axis``
+  replicated        everything else — the global model, the Eqn-12 queue
+                    scalar, the round counter, the RNG key
+
+The single-device fallback (``mesh=()``) resolves to ``SINGLE_DEVICE``,
+whose shardings are all None: the engine then builds exactly the
+pre-placement jits, so the default spec is bit-identical to the old
+behavior.  A 1-device mesh (``mesh=(1,)``) builds a real `Mesh` and goes
+through the sharded jit path — the placement-parity test pins that this
+too reproduces the unsharded trace bit for bit.
+
+The engine consumes a `Placement` through jit ``in_shardings`` /
+``out_shardings`` on the fused round and the lax.scan-over-rounds: XLA's
+SPMD partitioner then keeps per-shard work local and inserts the
+all-reduces the Eqn-19 global average needs.  (A ``shard_map`` around the
+padded membership gathers would make locality explicit instead of
+inferred; that needs shard-aligned cluster memberships, which k-means
+does not give — see API.md "Placement".)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from .spec import ShardingSpec
+
+# FleetState field -> leaf-group membership (leading-dim semantics)
+DEVICE_GROUP = ("twins", "rep", "channel")
+CLUSTER_GROUP = ("cluster_params", "cluster_ts")
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A resolved mesh + the axis each FleetState leaf group shards on."""
+    mesh: Optional[Mesh] = None
+    device_axis: Optional[str] = None
+    cluster_axis: Optional[str] = None
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    # ------------------------------------------------------------------ #
+    def sharding(self, axis: Optional[str] = None) -> Optional[NamedSharding]:
+        """NamedSharding partitioning the leading dim over ``axis``
+        (None = replicated).  Returns None on the single-device fallback."""
+        if self.mesh is None:
+            return None
+        spec = PartitionSpec() if axis is None else PartitionSpec(axis)
+        return NamedSharding(self.mesh, spec)
+
+    def replicated(self) -> Optional[NamedSharding]:
+        return self.sharding(None)
+
+    def group_axis(self, field: str) -> Optional[str]:
+        if field in DEVICE_GROUP:
+            return self.device_axis
+        if field in CLUSTER_GROUP:
+            return self.cluster_axis
+        return None
+
+    def state_shardings(self, state) -> Any:
+        """A pytree of NamedShardings matching a `FleetState` (any NamedTuple
+        whose field names follow the leaf-group convention)."""
+        out = {}
+        for field in state._fields:
+            sh = self.sharding(self.group_axis(field))
+            out[field] = jax.tree.map(lambda _: sh, getattr(state, field))
+        return type(state)(**out)
+
+    def tree_replicated(self, tree) -> Any:
+        repl = self.replicated()
+        return jax.tree.map(lambda _: repl, tree)
+
+    def shard_state(self, state) -> Any:
+        """Commit a FleetState's leaves to their group shardings."""
+        if not self.is_sharded:
+            return state
+        return jax.device_put(state, self.state_shardings(state))
+
+
+SINGLE_DEVICE = Placement()
+
+
+def resolve(sharding: ShardingSpec, *, n_devices: int,
+            n_clusters: int) -> Placement:
+    """`ShardingSpec` -> `Placement` over this process's visible devices.
+
+    Raises with a readable error when the mesh does not divide the fleet
+    (delegated to ``ShardingSpec.validate``) or needs more devices than
+    the backend exposes.
+    """
+    if not sharding.is_sharded:
+        return SINGLE_DEVICE
+    sharding.validate(n_devices, n_clusters)
+    need = math.prod(sharding.mesh)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise ValueError(
+            f"sharding: mesh {sharding.mesh} needs {need} devices but the "
+            f"{devices[0].platform} backend exposes {len(devices)}; on a "
+            "CPU host, force a device pool with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    axes = sharding.resolved_axes()
+    mesh = Mesh(np.asarray(devices[:need]).reshape(sharding.mesh), axes)
+    return Placement(mesh=mesh, device_axis=sharding.device_axis,
+                     cluster_axis=sharding.resolved_cluster_axis(axes))

@@ -52,8 +52,13 @@ AGGREGATORS = Registry("aggregator")
 CONTROLLERS = Registry("controller")
 TASKS = Registry("task")
 SCENARIOS = Registry("scenario")
+# execution engines, keyed by `FederationSpec.scale` — entries must satisfy
+# the `repro.api.engine.Engine` protocol (classmethod ``from_spec`` plus
+# ``run``/``run_scanned`` emitting the FLTrace schema)
+ENGINES = Registry("engine")
 
 register_aggregator = AGGREGATORS.register
 register_controller = CONTROLLERS.register
 register_task = TASKS.register
 register_scenario = SCENARIOS.register
+register_engine = ENGINES.register

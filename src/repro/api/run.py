@@ -19,7 +19,7 @@ import sys
 from .federation import Federation
 from . import scenarios  # noqa: F401  (populates SCENARIOS)
 from .registry import SCENARIOS
-from .spec import FederationSpec
+from .spec import FederationSpec, ShardingSpec
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -36,6 +36,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--clusters", type=int, default=None)
     ap.add_argument("--eval-every", type=float, default=3.0)
     ap.add_argument("--aggregator", default=None)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape sharding the fleet, e.g. '8' or '4x2' "
+                         "(needs that many devices; on CPU force a pool "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--spec-json", action="store_true",
                     help="print the resolved spec as JSON and exit")
     ap.add_argument("--trace-out", default="",
@@ -60,7 +65,20 @@ def resolve_spec(args) -> FederationSpec:
     if args.aggregator is not None:
         spec = spec.replace(aggregator=dataclasses.replace(
             spec.aggregator, kind=args.aggregator))
+    if args.mesh is not None:
+        try:
+            shape = tuple(int(d) for d in
+                          args.mesh.replace("x", ",").split(","))
+        except ValueError:
+            raise ValueError(f"--mesh {args.mesh!r}: expected a mesh shape "
+                             "like '8' or '4x2'") from None
+        spec = spec.replace(sharding=ShardingSpec(mesh=shape))
     return spec.validate()
+
+
+def _config_error(e: BaseException) -> int:
+    print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+    return 2
 
 
 def main(argv=None) -> int:
@@ -72,8 +90,7 @@ def main(argv=None) -> int:
     try:
         spec = resolve_spec(args)
     except (KeyError, ValueError) as e:
-        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
-        return 2
+        return _config_error(e)
     if args.spec_json:
         print(json.dumps(spec.to_dict(), indent=2))
         return 0
@@ -81,7 +98,12 @@ def main(argv=None) -> int:
     print(f"scenario={args.scenario} scale={spec.scale} "
           f"controller={spec.controller.kind} "
           f"aggregator={spec.aggregator.kind}")
-    fed = Federation.from_spec(spec)
+    try:
+        fed = Federation.from_spec(spec)
+    except (KeyError, ValueError) as e:
+        # component/placement resolution failures (e.g. a mesh larger than
+        # the visible device pool) are config errors, not tracebacks
+        return _config_error(e)
     trace = fed.run(eval_every=args.eval_every)
     print("t,round,cluster,a,loss,acc,energy,aggs")
     for r in trace.records:

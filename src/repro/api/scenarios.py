@@ -10,7 +10,7 @@ from __future__ import annotations
 from .registry import register_scenario
 from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
                    ControllerSpec, DATACENTER_SCALE, FederationSpec,
-                   FleetSpec, PrivacySpec, TaskSpec)
+                   FleetSpec, PrivacySpec, ShardingSpec, TaskSpec)
 
 
 @register_scenario("sync-baseline")
@@ -67,6 +67,16 @@ def _adaptive_scanned() -> FederationSpec:
     return FederationSpec(
         controller=ControllerSpec("dqn", {"episodes": 3, "horizon": 20}),
         execution="scanned", rounds=40, sim_seconds=15.0)
+
+
+@register_scenario("adaptive-scanned-sharded")
+def _adaptive_scanned_sharded() -> FederationSpec:
+    """Scanned full scheme on an 8-way fleet mesh (API.md "Placement")."""
+    return FederationSpec(
+        fleet=FleetSpec(n_devices=16),
+        controller=ControllerSpec("dqn", {"episodes": 3, "horizon": 20}),
+        execution="scanned", rounds=40, sim_seconds=15.0,
+        sharding=ShardingSpec(mesh=(8,)))
 
 
 @register_scenario("lm-modeA")

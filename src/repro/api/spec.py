@@ -10,12 +10,101 @@ names against the registries.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 from . import registry
 
 DEVICE_SCALE = "device"          # discrete-event simulator over the MLP task
 DATACENTER_SCALE = "datacenter"  # sharded fl_step modes over the LM task
+
+# default axis names by mesh rank: 1-D meshes shard the fleet's device dim;
+# 2-D meshes put the cluster stack on the leading axis
+_DEFAULT_AXES = {1: ("fleet",), 2: ("cluster", "fleet")}
+
+
+@dataclasses.dataclass
+class ShardingSpec:
+    """Where the federation runs, as spec data (resolved by
+    `repro.api.placement` into a `jax.sharding` mesh + per-leaf-group
+    `NamedSharding`s).
+
+    ``mesh`` is the mesh shape; ``()`` (the default) is the single-device
+    fallback — bit-identical to the pre-placement engine.  ``axes`` names
+    one mesh axis per entry (defaults: 1-D ``("fleet",)``, 2-D
+    ``("cluster", "fleet")``).  ``device_axis`` shards the `FleetState`
+    device-dim leaf group (twins / rep / channel) and ``cluster_axis`` the
+    cluster-dim group (stacked params / event times); either may be None to
+    replicate that group.  Scalars (queue, round, RNG key) and the global
+    model are always replicated.
+    """
+    mesh: Tuple[int, ...] = ()
+    axes: Optional[Tuple[str, ...]] = None
+    device_axis: Optional[str] = "fleet"
+    cluster_axis: Optional[str] = None
+
+    def __post_init__(self):
+        # JSON round-trips deliver lists; normalize so eq/hash behave
+        self.mesh = tuple(int(m) for m in self.mesh)
+        if self.axes is not None:
+            self.axes = tuple(str(a) for a in self.axes)
+
+    @property
+    def is_sharded(self) -> bool:
+        return bool(self.mesh)
+
+    def resolved_axes(self) -> Tuple[str, ...]:
+        if self.axes is not None:
+            return self.axes
+        try:
+            return _DEFAULT_AXES[len(self.mesh)]
+        except KeyError:
+            raise ValueError(
+                f"sharding: no default axis names for a {len(self.mesh)}-D "
+                "mesh; set axes=(...) explicitly") from None
+
+    def resolved_cluster_axis(self, axes: Tuple[str, ...]) -> Optional[str]:
+        """Default cluster placement: the "cluster" axis when the mesh has
+        one, else replicated."""
+        if self.cluster_axis is not None:
+            return self.cluster_axis
+        return "cluster" if "cluster" in axes else None
+
+    def validate(self, n_devices: int, n_clusters: int) -> "ShardingSpec":
+        if not self.mesh:
+            return self
+        if any(m < 1 for m in self.mesh):
+            raise ValueError(f"sharding: mesh {self.mesh} has a "
+                             "non-positive extent")
+        axes = self.resolved_axes()
+        if len(axes) != len(self.mesh):
+            raise ValueError(
+                f"sharding: mesh {self.mesh} has {len(self.mesh)} axes but "
+                f"axes={axes} names {len(axes)}")
+        if len(set(axes)) != len(axes):
+            raise ValueError(f"sharding: duplicate axis names in {axes}")
+        cluster_axis = self.resolved_cluster_axis(axes)
+        for role, name, dim, total in (
+                ("device_axis", self.device_axis, "n_devices", n_devices),
+                ("cluster_axis", cluster_axis, "n_clusters", n_clusters)):
+            if name is None:
+                continue
+            if name not in axes:
+                raise ValueError(
+                    f"sharding: {role}={name!r} is not a mesh axis; "
+                    f"axes={axes}")
+            k = self.mesh[axes.index(name)]
+            if total % k:
+                raise ValueError(
+                    f"sharding: mesh axis {name!r} has {k} shards, which "
+                    f"does not divide {dim}={total}; pad the fleet or pick "
+                    f"a mesh shape with {dim} % shards == 0")
+        if (self.device_axis is not None and cluster_axis is not None
+                and self.device_axis == cluster_axis):
+            raise ValueError(
+                f"sharding: device_axis and cluster_axis are both "
+                f"{cluster_axis!r}; the device and cluster dims need "
+                "distinct mesh axes (or replicate one with None)")
+        return self
 
 
 @dataclasses.dataclass
@@ -84,6 +173,7 @@ class FederationSpec:
     task: TaskSpec = dataclasses.field(default_factory=TaskSpec)
     privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
     channel: ChannelSpec = dataclasses.field(default_factory=ChannelSpec)
+    sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
     sim_seconds: float = 60.0        # device scale: simulated wall-clock
     rounds: int = 20                 # global rounds (datacenter scale, and
                                      # the K of device-scale "scanned" runs)
@@ -97,20 +187,32 @@ class FederationSpec:
 
     # ------------------------------------------------------------------ #
     def validate(self) -> "FederationSpec":
-        if self.scale not in (DEVICE_SCALE, DATACENTER_SCALE):
-            raise ValueError(f"unknown scale {self.scale!r}")
+        # `scale` is a registry key like every other component; the built-in
+        # engines register themselves on import of repro.api.engine
+        from . import engine as _engine  # noqa: F401  (populates ENGINES)
+        registry.ENGINES.get(self.scale)
         registry.CONTROLLERS.get(self.controller.kind)
         registry.AGGREGATORS.get(self.aggregator.kind)
         registry.TASKS.get(self.task.kind)
-        # built-in tasks are scale-specific; custom registrations are not
-        # checked (they may support either engine protocol)
+        # built-in tasks are scale-specific; custom registrations (tasks or
+        # engines) are not checked — they may support either engine protocol
         scale_of = {"mlp": DEVICE_SCALE, "lm": DATACENTER_SCALE}
         want = scale_of.get(self.task.kind)
-        if want is not None and want != self.scale:
+        if (want is not None and want != self.scale
+                and self.scale in (DEVICE_SCALE, DATACENTER_SCALE)):
             fit = "lm" if self.scale == DATACENTER_SCALE else "mlp"
             raise ValueError(
                 f"task {self.task.kind!r} is {want}-scale but spec has "
                 f"scale={self.scale!r}; use task {fit!r}")
+        # custom-registered engines may consume a placement; only the
+        # built-in datacenter engine is known not to (fl_step manages its
+        # own sharding)
+        if self.sharding.is_sharded and self.scale == DATACENTER_SCALE:
+            raise ValueError(
+                "sharding: mesh placement is not supported at datacenter "
+                "scale (the fl_step modes manage their own sharding)")
+        self.sharding.validate(self.fleet.n_devices,
+                               self.clustering.n_clusters)
         if self.scale == DATACENTER_SCALE:
             # fl_step implements Eqn-6 trust weighting inside the jit-ed
             # step; robust rules and DP have no datacenter implementation
@@ -183,6 +285,7 @@ _NESTED = {
     ("FederationSpec", "task"): TaskSpec,
     ("FederationSpec", "privacy"): PrivacySpec,
     ("FederationSpec", "channel"): ChannelSpec,
+    ("FederationSpec", "sharding"): ShardingSpec,
 }
 
 

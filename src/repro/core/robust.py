@@ -97,6 +97,30 @@ def trimmed_mean(client_params, beta: float = 0.2):
     return _unflat_like(s.mean(axis=0), client_params)
 
 
+def masked_trimmed_mean(client_params, mask, beta: float = 0.2):
+    """Trimmed mean over the ``mask``-valid client rows, at fixed shape.
+
+    The same ±inf-padded-sort construction as `masked_coordinate_median`:
+    padded rows sort past the n valid entries, so ranks [k, n-k) of the
+    sorted prefix are exactly the coordinates `trimmed_mean` keeps on the
+    compacted rows, with k = floor(n·beta) re-derived from the traced valid
+    count (and the k = 0 fallback when trimming would drop everything).
+    This gives `trimmed_mean` ``supports_mask=True``: one padded fused-round
+    compile instead of one exact-shape compile per cluster size.
+    """
+    flat = _flat(client_params)
+    big = jnp.where(mask[:, None], flat, jnp.inf)
+    s = jnp.sort(big, axis=0)
+    n = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+    k = jnp.floor(n.astype(jnp.float32) * beta).astype(jnp.int32)
+    k = jnp.where(n - 2 * k >= 1, k, 0)
+    ranks = jnp.arange(s.shape[0], dtype=jnp.int32)[:, None]
+    keep = ((ranks >= k) & (ranks < n - k)).astype(jnp.float32)
+    mean = jnp.sum(jnp.where(keep > 0, s, 0.0), axis=0) / jnp.maximum(
+        n - 2 * k, 1).astype(jnp.float32)
+    return _unflat_like(mean, client_params)
+
+
 AGGREGATORS = {
     "krum": krum,
     "multi_krum": multi_krum,
@@ -109,4 +133,5 @@ AGGREGATORS = {
 # exact-shape compile per cluster size
 MASKED_AGGREGATORS = {
     "median": masked_coordinate_median,
+    "trimmed_mean": masked_trimmed_mean,
 }

@@ -15,6 +15,13 @@ rows (ragged cluster memberships run as fixed-shape grids in the fused
 `FleetState` round) contribute exactly zero: the kernel multiplies the
 weight column by the mask before the reduction, keeping one compiled grid
 shape for every cluster regardless of its true membership count.
+
+``trust_aggregate_global`` extends the grid with the cluster batch dim the
+engine's aggregation path needs: each (B + C, BLOCK) step reduces the C
+member updates of the round's cluster (Eqn 6) *and* substitutes the result
+into the (B, BLOCK) stacked-cluster tile for the Eqn-19 staleness-weighted
+global average — one VMEM pass instead of kernel + jnp re-read, and the
+unit the placement layer partitions per shard.
 """
 from __future__ import annotations
 
@@ -39,6 +46,21 @@ def _masked_kernel(w_ref, m_ref, x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
     o_ref[...] = jnp.sum(x * w, axis=0).astype(o_ref.dtype)
+
+
+def _global_kernel(c_ref, w_ref, m_ref, gw_ref, x_ref, s_ref, o_ref):
+    # x_ref: (C, BLOCK) member updates; s_ref: (B, BLOCK) cluster stack;
+    # w_ref/m_ref: (C, 1) weights/mask; gw_ref: (B, 1) Eqn-19 staleness
+    # weights; c_ref: (1, 1) i32 index of the cluster being updated (a
+    # data-dependent operand — scalar-prefetch SMEM on a real TPU).
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
+    agg = jnp.sum(x * w, axis=0)                       # Eqn 6, (BLOCK,)
+    s = s_ref[...].astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0)
+    s = jnp.where(rows == c_ref[0, 0], agg[None, :], s)
+    gw = gw_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sum(s * gw, axis=0).astype(o_ref.dtype)  # Eqn 19
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -70,4 +92,41 @@ def trust_aggregate(params_flat, weights, mask=None, *, block: int = BLOCK,
             in_specs=[w_spec, pl.BlockSpec((C, 1), lambda i: (0, 0)), x_spec],
             out_specs=out_spec, out_shape=out_shape, interpret=interpret,
         )(weights[:, None], mask.astype(jnp.float32)[:, None], x)
+    return out[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def trust_aggregate_global(updates_flat, weights, mask, stack_flat,
+                           global_weights, c, *, block: int = BLOCK,
+                           interpret: bool = False):
+    """Fused Eqn 6 + Eqn 19: member updates -> the post-round global model.
+
+    (C, N) member updates with (C,) weights/mask reduce to the round
+    cluster's aggregate, which replaces row ``c`` of the (B, N) stacked
+    cluster parameters before the (B,) staleness-weighted global average —
+    all inside one grid pass over N.  Returns the (N,) global vector (the
+    async-pull engine writes it back to both ``global_params`` and row
+    ``c`` of the stack, so the intermediate Eqn-6 aggregate never
+    round-trips through HBM).
+    """
+    C, N = updates_flat.shape
+    B, Ns = stack_flat.shape
+    assert Ns == N, (Ns, N)
+    pad = (-N) % block
+    if pad:
+        updates_flat = jnp.pad(updates_flat, ((0, 0), (0, pad)))
+        stack_flat = jnp.pad(stack_flat, ((0, 0), (0, pad)))
+    Np = N + pad
+    col = lambda r: pl.BlockSpec((r, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _global_kernel, grid=(Np // block,),
+        in_specs=[col(1), col(C), col(C), col(B),
+                  pl.BlockSpec((C, block), lambda i: (0, i)),
+                  pl.BlockSpec((B, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), stack_flat.dtype),
+        interpret=interpret,
+    )(jnp.asarray(c, jnp.int32).reshape(1, 1), weights[:, None],
+      mask.astype(jnp.float32)[:, None], global_weights[:, None],
+      updates_flat, stack_flat)
     return out[:N]

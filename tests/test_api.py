@@ -162,14 +162,16 @@ def test_fleet_state_is_device_resident_pytree():
 
 
 def test_exact_shape_mode_drives_robust_aggregators():
-    """Aggregators without mask support (rank statistics) run through the
-    exact-shape jitted round and still produce a learning federation."""
+    """Aggregators without mask support (krum-family rank statistics; the
+    ±inf-padded sorts give median and trimmed_mean masked variants) run
+    through the exact-shape jitted round and still produce a learning
+    federation."""
     data, parts = _data(seed=7)
     spec = FederationSpec(
         fleet=FleetSpec(n_devices=8, malicious_frac=0.25),
         clustering=api.ClusteringSpec(n_clusters=2),
         controller=ControllerSpec("fixed", {"a": 3}),
-        aggregator=AggregatorSpec("trimmed_mean"),
+        aggregator=AggregatorSpec("multi_krum"),
         sim_seconds=3.0, local_batch=32, seed=7)
     fed = Federation.from_spec(spec, data=data, parts=parts)
     assert not fed.engine._padded          # exact member shapes, no padding

@@ -136,6 +136,42 @@ def test_median_joins_padded_fused_round():
     assert trace.records and all(np.isfinite(r.loss) for r in trace.records)
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=9),
+       st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_masked_trimmed_mean_matches_dense(n_clients, n_valid, seed):
+    from repro.core.robust import masked_trimmed_mean, trimmed_mean
+    n_valid = min(n_valid, n_clients)
+    rng = np.random.default_rng(seed)
+    mask = np.zeros(n_clients, bool)
+    mask[rng.choice(n_clients, n_valid, replace=False)] = True
+    tree = {"w": jnp.asarray(rng.normal(size=(n_clients, 5, 2)),
+                             jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n_clients, 4)), jnp.float32)}
+    got = masked_trimmed_mean(tree, jnp.asarray(mask))
+    dense = trimmed_mean(
+        jax.tree.map(lambda l: l[np.where(mask)[0]], tree))
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(got[k]),
+                                   np.asarray(dense[k]), atol=1e-6)
+
+
+def test_trimmed_mean_joins_padded_fused_round_and_scan():
+    """`supports_mask=True` via the ±inf-padded sort: trimmed_mean shares
+    the padded fixed-shape round and is accepted by execution='scanned'."""
+    data, parts = _data(seed=3)
+    spec = _spec(3, ControllerSpec("fixed", {"a": 3}),
+                 n_clusters=2, aggregator=AggregatorSpec("trimmed_mean"),
+                 fleet=FleetSpec(n_devices=8, malicious_frac=0.25),
+                 execution="scanned", rounds=6)
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    assert fed.engine._padded            # one compile, not one per size
+    trace = fed.run()                    # the lax.scan-over-rounds path
+    assert len(trace.records) == 7       # 6 rounds + final eval
+    assert all(np.isfinite(r.loss) for r in trace.records)
+
+
 # --------------------------------------------------------------------- #
 # run_scanned(K) == event-heap run at a fixed seed
 # --------------------------------------------------------------------- #
@@ -208,7 +244,7 @@ def test_scanned_queue_leaf_matches_host_queue():
 def test_run_scanned_rejects_exact_shape_aggregators():
     data, parts = _data(seed=2)
     spec = _spec(2, ControllerSpec("fixed", {"a": 2}), n_clusters=2,
-                 aggregator=AggregatorSpec("trimmed_mean"))
+                 aggregator=AggregatorSpec("multi_krum"))
     fed = Federation.from_spec(spec, data=data, parts=parts)
     with pytest.raises(ValueError, match="supports_mask=False"):
         fed.engine.run_scanned(4)

@@ -13,6 +13,7 @@ except ImportError:                     # container image has no hypothesis
 from repro.kernels import (flash_attention, rglru_scan, selective_scan,
                            trust_aggregate, trust_aggregate_tree)
 from repro.kernels import ref
+from repro.kernels.trust_aggregate import trust_aggregate_global
 
 
 @pytest.mark.parametrize("C,N,dtype", [
@@ -59,6 +60,30 @@ def test_masked_trust_aggregate_zeroes_nonzero_padded_weights():
     mask = jnp.asarray([True, True, False, False])
     got = trust_aggregate(x, w, mask, interpret=True)
     np.testing.assert_allclose(np.asarray(got), 0.5, atol=1e-7)
+
+
+@given(st.integers(2, 10), st.integers(1, 9), st.integers(2, 6),
+       st.integers(64, 3000))
+@settings(max_examples=10, deadline=None)
+def test_trust_aggregate_global_matches_two_step(C, valid, B, N):
+    """Property: the fused Eqn-6+19 kernel equals the two-step reference —
+    masked Eqn-6 aggregate, substituted into row c of the cluster stack,
+    then the staleness-weighted average — for every cluster index c."""
+    valid = min(valid, C)
+    key = jax.random.PRNGKey(C * 31 + B * 7 + N)
+    x = jax.random.normal(key, (C, N))
+    mask = jnp.arange(C) < valid
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (C,))) * mask
+    stack = jax.random.normal(jax.random.fold_in(key, 2), (B, N))
+    gw = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 3), (B,)))
+    for c in (0, B - 1):
+        got = trust_aggregate_global(x, w, mask, stack, gw, c,
+                                     interpret=True)
+        agg = trust_aggregate(x, w, mask, interpret=True)
+        want = (gw[:, None] * stack.at[c].set(agg)).sum(0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
 
 
 def test_trust_aggregate_tree_matches_tree_average():
