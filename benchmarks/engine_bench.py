@@ -37,14 +37,20 @@ the mesh adds partitioning/collective overhead rather than speed — the
 recorded ratio is the cost of the placement plumbing at n_devices >= 256,
 the configuration real multi-host meshes scale capacity with.
 
+``--segmented`` benches service-mode execution (`repro.serve`): S
+segments of `run_scanned(K)` each followed by a full resumable checkpoint
+(`SegmentRunner`) against the same S*K rounds in one scan — the recorded
+per-segment overhead is the price of bit-exact resumability.
+
     PYTHONPATH=src python benchmarks/engine_bench.py            # full
     PYTHONPATH=src python benchmarks/engine_bench.py --fast     # CI smoke
     PYTHONPATH=src python benchmarks/engine_bench.py --scanned  # scan bench
+    PYTHONPATH=src python benchmarks/engine_bench.py --segmented
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python benchmarks/engine_bench.py --sharded
 
 Full runs write BENCH_engine_throughput.json / BENCH_engine_scan.json /
-BENCH_engine_shard.json at the repo root.
+BENCH_engine_shard.json / BENCH_engine_segmented.json at the repo root.
 """
 from __future__ import annotations
 
@@ -401,6 +407,83 @@ def run_shard_bench(args):
     return 0
 
 
+def run_segmented_bench(args):
+    """Checkpoint overhead of service-mode execution: S segments of
+    `run_scanned(K)` with a full resumable checkpoint after each
+    (`repro.serve.SegmentRunner`) vs the same S*K rounds in one scan."""
+    import tempfile
+
+    from repro.serve import SegmentRunner
+
+    key = jax.random.PRNGKey(0)
+    data = make_classification(key, n=args.samples, dim=args.dim)
+    parts = dirichlet_partition(key, data.y, args.devices)
+    spec = FederationSpec(
+        fleet=FleetSpec(n_devices=args.devices),
+        clustering=ClusteringSpec(n_clusters=args.clusters),
+        controller=ControllerSpec("fixed", {"a": 3}),
+        aggregator=AggregatorSpec("trust"),
+        execution="scanned", rounds=args.segment_rounds, sim_seconds=1e9,
+        local_batch=args.local_batch, seed=0)
+    K, S = args.segment_rounds, args.segments
+
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    fed.engine.run_scanned(S * K, eval_final=False)       # compile + warm
+    straight_dt = min(_timed(lambda: fed.engine.run_scanned(
+        S * K, eval_final=False)) for _ in range(3))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        fed2 = Federation.from_spec(spec, data=data, parts=parts)
+        runner = SegmentRunner(fed2, ckpt_dir, segment_rounds=K, keep=2,
+                               eval_final=False)
+        runner.run_segment()                              # compile + warm
+
+        def run_segments():
+            for _ in range(S):
+                runner.run_segment()
+
+        seg_dt = min(_timed(run_segments) for _ in range(3))
+        ckpt_dt = min(_timed(runner.checkpoint) for _ in range(3))
+
+    straight_rps = S * K / straight_dt
+    seg_rps = S * K / seg_dt
+    overhead = (seg_dt - straight_dt) / S
+    print(f"engine,straight_scan_rounds_per_sec,{straight_rps:.2f}")
+    print(f"engine,segmented_rounds_per_sec,{seg_rps:.2f}")
+    print(f"engine,checkpoint_seconds_per_segment,{ckpt_dt:.4f}")
+    print(f"engine,segment_overhead_seconds,{overhead:.4f} "
+          f"(K={K}, {S} segments)")
+
+    if not args.fast:
+        payload = {
+            "bench": "repro.serve segmented execution: run_scanned(K) x S "
+                     "with a full resumable checkpoint per segment vs one "
+                     "run_scanned(S*K)",
+            "note": "checkpoint = FleetState (typed PRNG key included) + "
+                    "event times + policy carry to .npz, plus the JSON "
+                    "manifest, both written atomically; overhead is the "
+                    "service-mode price of bit-exact resumability per "
+                    "segment",
+            "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+            "device": str(jax.devices()[0]),
+            "n_devices": args.devices,
+            "n_clusters": args.clusters,
+            "segment_rounds": K,
+            "segments": S,
+            "local_batch": args.local_batch,
+            "dim": args.dim,
+            "straight_scan_rounds_per_sec": round(straight_rps, 2),
+            "segmented_rounds_per_sec": round(seg_rps, 2),
+            "checkpoint_seconds_per_segment": round(ckpt_dt, 4),
+            "segment_overhead_seconds": round(overhead, 4),
+            "throughput_ratio": round(seg_rps / straight_rps, 3),
+        }
+        with open(args.seg_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.seg_out}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=None)
@@ -428,19 +511,30 @@ def main(argv=None):
                          "the single-device fallback (needs a device pool; "
                          "see module docstring)")
     ap.add_argument("--mesh-size", type=int, default=8)
+    ap.add_argument("--segmented", action="store_true",
+                    help="bench checkpointed segments (repro.serve "
+                         "SegmentRunner) vs one straight run_scanned")
+    ap.add_argument("--segment-rounds", type=int, default=25,
+                    help="K rounds per segment (--segmented)")
+    ap.add_argument("--segments", type=int, default=4,
+                    help="segments per timed pass (--segmented)")
     ap.add_argument("--out", default="BENCH_engine_throughput.json")
     ap.add_argument("--scan-out", default="BENCH_engine_scan.json")
     ap.add_argument("--shard-out", default="BENCH_engine_shard.json")
+    ap.add_argument("--seg-out", default="BENCH_engine_segmented.json")
     args = ap.parse_args(argv)
     # per-mode defaults (any explicit flag wins)
     scan_defaults = dict(devices=64, clusters=16, rounds=150, samples=2048,
                          dim=32, local_batch=8)
     shard_defaults = dict(devices=256, clusters=16, rounds=60, samples=4096,
                           dim=32, local_batch=8)
+    seg_defaults = dict(devices=64, clusters=16, rounds=100, samples=2048,
+                        dim=32, local_batch=8)
     full_defaults = dict(devices=64, clusters=8, rounds=100, samples=4096,
                          dim=128, local_batch=64)
     mode_defaults = (shard_defaults if args.sharded
-                     else scan_defaults if args.scanned else full_defaults)
+                     else scan_defaults if args.scanned
+                     else seg_defaults if args.segmented else full_defaults)
     for name, val in mode_defaults.items():
         if getattr(args, name) is None:
             setattr(args, name, val)
@@ -450,10 +544,14 @@ def main(argv=None):
         args.samples, args.dim = 1024, 64
         if args.sharded:
             args.devices, args.clusters = 32, 4
+        if args.segmented:
+            args.segment_rounds, args.segments = 4, 2
     if args.sharded:
         return run_shard_bench(args)
     if args.scanned:
         return run_scan_bench(args)
+    if args.segmented:
+        return run_segmented_bench(args)
 
     key = jax.random.PRNGKey(0)
     data = make_classification(key, n=args.samples, dim=args.dim)

@@ -33,6 +33,22 @@ echo "== scanned scenario CLI =="
 python -m repro.api.run --scenario adaptive-scanned --rounds 6 \
     --devices 8 --clusters 2 | tail -n 3
 
+echo "== service mode (start -> checkpoint -> resume -> status) =="
+SERVE_DIR=$(mktemp -d /tmp/serve_smoke.XXXXXX)
+python -m repro.serve start --run-dir "$SERVE_DIR" \
+    --scenario autoencoder-anomaly --segment-rounds 5 --max-segments 2 \
+    --foreground
+python -m repro.serve checkpoint --run-dir "$SERVE_DIR"
+python -m repro.serve resume --run-dir "$SERVE_DIR" \
+    --segment-rounds 5 --max-segments 1 --foreground
+python -m repro.serve status --run-dir "$SERVE_DIR" --tail 1 \
+    | python -c "import json,sys; s=json.load(sys.stdin)['state']; \
+print('serve:', s['status'], 'rounds', s['rounds'], 'acc', s['last_acc'])"
+rm -rf "$SERVE_DIR"
+
+echo "== segmented checkpointed execution (serve overhead, fast) =="
+python benchmarks/engine_bench.py --segmented --fast
+
 echo "== sharded placement (8-way forced host mesh) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python benchmarks/engine_bench.py --sharded --fast

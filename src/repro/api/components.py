@@ -43,6 +43,10 @@ from repro.control import policy as ctl_policy
 from repro.control.scanned_dqn import train_on_env
 from repro.core import dqn as dqn_lib
 from repro.core import envs
+from repro.core.autoencoder import (anomaly_auc, code_mean,
+                                    init_mlp_autoencoder,
+                                    reconstruction_errors,
+                                    reconstruction_loss)
 from repro.core.lyapunov import init_queue, step_queue
 from repro.core.mlp import (accuracy, classifier_loss, init_mlp_classifier,
                             mlp_hidden_mean)
@@ -222,6 +226,12 @@ class DQNController:
         (`repro.control.distill_table`) for microsecond selects."""
         return ctl_policy.distill_table(self.agent.eval_params, **kw)
 
+    def restore_policy_state(self, eval_params) -> None:
+        """Adopt a checkpointed scan-policy carry (`repro.serve` restores
+        the exact deployed net rather than relying on the registry's
+        deterministic re-pretrain)."""
+        self.agent = self.agent._replace(eval_params=eval_params)
+
     @classmethod
     def pretrain(cls, seed: int = 0, episodes: int = 4, horizon: int = 25,
                  p_good: float = 0.5, calibrate_dt: bool = True,
@@ -373,6 +383,68 @@ class MLPTask:
         return (y + 1) % self.n_classes
 
 
+class AutoencoderAnomalyTask:
+    """Federated autoencoder anomaly detection over IoT telemetry — the
+    first non-classification workload (FedIoT-style, SNIPPETS.md §3).
+
+    Same engine contract as `MLPTask` (jit-safe ``local_train`` with a
+    traced step count, vmapped per-member losses), but the loss is the mean
+    squared *reconstruction* error and training is unsupervised — batch
+    labels carry the anomaly ground truth for evaluation only, so the
+    Eqn-4/5 trust pipeline (learning quality, gradient diversity, belief)
+    runs on reconstruction gradients exactly as it does on classification
+    gradients.  ``evaluate`` reports the reconstruction loss plus the
+    threshold-free detection AUC of per-sample errors against the labels
+    (surfacing in the trace's ``acc`` field).
+
+    Byzantine label-flipping has no lever here (the training loss never
+    reads labels), so ``corrupt_labels`` is the identity — model input
+    poisoning instead via a custom task if needed.
+    """
+
+    def __init__(self, hidden: int = 64, code: int = 8):
+        self.hidden = hidden
+        self.code = code
+        self._client_sgd_v = jax.jit(
+            jax.vmap(self._client_sgd, in_axes=(0, 0, None, None)))
+        self._losses_v = jax.vmap(reconstruction_loss, in_axes=(0, 0))
+
+    @staticmethod
+    def _client_sgd(params, batch, lr, steps):
+        def one(_, p):
+            g = jax.grad(reconstruction_loss)(p, batch)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g)
+        return jax.lax.fori_loop(0, steps, one, params)
+
+    def init(self, key, dim: int):
+        return init_mlp_autoencoder(key, dim=dim, hidden=self.hidden,
+                                    code=self.code)
+
+    def local_train(self, stacked_params, batch, lr: float, steps: int):
+        """vmap-ed a_i SGD steps on the reconstruction loss."""
+        return self._client_sgd_v(stacked_params, batch, lr, steps)
+
+    def losses(self, stacked_params, batch):
+        return self._losses_v(stacked_params, batch)
+
+    def loss(self, params, batch):
+        return reconstruction_loss(params, batch)
+
+    def evaluate(self, params, data) -> Dict[str, float]:
+        scores = reconstruction_errors(params, data.x)
+        auc = float(anomaly_auc(scores, data.y))
+        return {
+            "acc": None if np.isnan(auc) else auc,   # detection AUC
+            "loss": float(jnp.mean(scores[:1024])),
+        }
+
+    def hidden_mean(self, params, x):
+        return code_mean(params, x)
+
+    def corrupt_labels(self, y):
+        return y          # unsupervised: labels never enter the loss
+
+
 class LMTask:
     """Datacenter-scale LM task over the sharded fl_step modes.
 
@@ -424,6 +496,14 @@ class LMTask:
 def _mlp(params: Dict[str, Any]):
     return MLPTask(**{k: v for k, v in params.items()
                       if k in ("hidden", "n_classes")})
+
+
+@register_task("autoencoder-anomaly")
+def _autoencoder(params: Dict[str, Any]):
+    # data-generation params (n_samples/dim/n_types/...) are consumed by
+    # `engine.default_device_data`; only the model dims reach the task
+    return AutoencoderAnomalyTask(**{k: v for k, v in params.items()
+                                     if k in ("hidden", "code")})
 
 
 @register_task("lm")

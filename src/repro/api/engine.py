@@ -168,7 +168,9 @@ class FleetState(NamedTuple):
     cluster_ts: jnp.ndarray     # (n_clusters,) last-update round, f32
     queue: jnp.ndarray          # ()  Eqn-12 Lyapunov deficit backlog, f32
     round: jnp.ndarray          # ()  global round counter, int32
-    key: jnp.ndarray            # PRNG key driving every round's randomness
+    key: jnp.ndarray            # typed PRNG key (jax.random.key) driving
+                                # every round's randomness; repro.checkpoint
+                                # round-trips it via its __key__: marker
 
 
 class DeviceScaleEngine:
@@ -192,7 +194,9 @@ class DeviceScaleEngine:
 
         n = spec.fleet.n_devices
         C = spec.clustering.n_clusters
-        key = jax.random.PRNGKey(spec.seed)
+        # typed key (not the legacy raw uint32 pair): same threefry bits,
+        # but the dtype survives a checkpoint round-trip as a key
+        key = jax.random.key(spec.seed)
         key0, kt, kd, kc, kp, km = jax.random.split(key, 6)
         twins = sample_deviation(kd, init_twins(kt, n), spec.fleet.dt_max_dev)
         sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
@@ -268,6 +272,16 @@ class DeviceScaleEngine:
         # `consumed` scalar crosses to the host anyway); a float32 device
         # accumulator would drop sub-ulp additions on long simulations
         self._energy_used = 0.0
+        # per-cluster event times carried *across* run_scanned calls, so
+        # run_scanned(K) twice continues exactly where run_scanned(2K)
+        # would be — the invariant the checkpointed service mode
+        # (`repro.serve`) resumes on.  The round counter and energy tally
+        # already carried; this makes the schedule carry too.
+        self._scan_times = jnp.zeros((C,), jnp.float32)
+        # optional streaming tap for emitted traces (`repro.serve` points
+        # this at a JSONL file); None = the in-memory batch default
+        self.trace_sink = None
+        self.trace_retain = True
         # control plane: jitted host ctx features / observation builders
         # + compiled scan paths
         self._features_fn = jax.jit(self._ctl_features)
@@ -284,6 +298,49 @@ class DeviceScaleEngine:
             data, parts = default_device_data(spec)
         return cls(spec, data, parts, controller=controller,
                    aggregator=aggregator, task=task, fused=fused)
+
+    # ------------------------------------------------------------------ #
+    # streamed traces + resumable state (the `repro.serve` surface)
+    # ------------------------------------------------------------------ #
+    def set_trace_sink(self, sink, *, retain: bool = True) -> None:
+        """Stream every emitted `RoundRecord` to ``sink`` (an object with
+        ``append(RoundRecord)``, e.g. `repro.api.records.JsonlSink`).
+        ``retain=False`` stops the trace from also accumulating records in
+        memory — required for unbounded service runs."""
+        self.trace_sink = sink
+        self.trace_retain = bool(retain)
+
+    def _new_trace(self) -> FLTrace:
+        return FLTrace(sink=self.trace_sink, retain=self.trace_retain)
+
+    @property
+    def scan_times(self) -> jnp.ndarray:
+        """The carried per-cluster next-event times of the scanned path."""
+        return self._scan_times
+
+    def resumable_state(self) -> dict:
+        """Everything device-resident a resumed run needs, as one
+        checkpointable pytree: the full `FleetState` (including the RNG-key
+        leaf and the Eqn-12 queue) plus the carried per-cluster event
+        times.  Host-side scalars (round counter, f64 energy tally) ride in
+        the checkpoint manifest instead — f64 would not survive an f32
+        npz/jnp round-trip with x64 disabled."""
+        return {"fleet": self.state, "times": self._scan_times}
+
+    def restore_resumable(self, tree: dict, *, rounds: int,
+                          energy: float) -> None:
+        """Adopt a `resumable_state` pytree (typically loaded through
+        `repro.checkpoint`) plus the manifest scalars.  The engine must
+        have been built from the same spec (assignments, partitions and the
+        malicious mask are all deterministic in the spec seed, so a fresh
+        process reconstructs them bit-identically)."""
+        self.state = self.placement.shard_state(tree["fleet"])
+        self._scan_times = jnp.asarray(tree["times"], jnp.float32)
+        self._rounds = int(rounds)
+        self._energy_used = float(energy)
+        sync_queue = getattr(self.controller, "sync_queue", None)
+        if sync_queue is not None:      # host controller adopts the
+            sync_queue(self.state.queue)  # restored Eqn-12 backlog
 
     # ------------------------------------------------------------------ #
     # the fused round: everything below runs inside one jit call
@@ -568,6 +625,12 @@ class DeviceScaleEngine:
         a controller exposing ``scan_policy()``; use the event-heap `run`
         for exact-shape robust rules, ``sim_seconds`` cutoffs, or per-round
         evaluation.
+
+        Consecutive calls *continue*: the per-cluster event-time vector
+        carries across calls (as the round counter and energy tally always
+        did), so ``run_scanned(K)`` twice produces the exact trace
+        ``run_scanned(2K)`` would — the segment invariant `repro.serve`
+        checkpoints and resumes on.
         """
         if not self._padded:
             raise ValueError(
@@ -584,11 +647,11 @@ class DeviceScaleEngine:
         fn = self._scan_cache.get(K)
         if fn is None:
             fn = self._scan_cache[K] = self._build_scan_fn(K, pol)
-        C = self.spec.clustering.n_clusters
-        (state, _, _, _), ys = fn(
-            self.state, jnp.zeros((C,), jnp.float32), pol.state,
+        (state, times, _, _), ys = fn(
+            self.state, self._scan_times, pol.state,
             jnp.float32(self._energy_used))
         self.state = state
+        self._scan_times = times        # schedule carries to the next call
         ys = jax.device_get(ys)             # the one end-of-run sync
         base = self._rounds
         self._rounds += K
@@ -603,7 +666,7 @@ class DeviceScaleEngine:
         if sync_queue is not None:          # host controller adopts the
             sync_queue(self.state.queue)    # device-resident backlog
 
-        trace = FLTrace()
+        trace = self._new_trace()
         for i in range(K):
             trace.append(RoundRecord(
                 t=float(ys["t"][i]), round=base + i + 1,
@@ -626,7 +689,7 @@ class DeviceScaleEngine:
             K = max_rounds if max_rounds is not None else self.spec.rounds
             return self.run_scanned(K)
         spec = self.spec
-        trace = FLTrace()
+        trace = self._new_trace()
         events = [(0.0, c) for c in range(spec.clustering.n_clusters)]
         heapq.heapify(events)
         t = 0.0
@@ -779,10 +842,31 @@ class DatacenterEngine:
 
 def default_device_data(spec: FederationSpec):
     """Synthetic non-IID federated data from the task params (the
-    device-scale default when `from_spec` gets no data/parts override)."""
-    from repro.data import dirichlet_partition, make_classification
+    device-scale default when `from_spec` gets no data/parts override).
+
+    Deterministic in ``spec.seed`` — a fresh process rebuilding an engine
+    from the same spec regenerates identical data and shards, which is what
+    lets `repro.serve` checkpoint only the `FleetState` and not the
+    dataset.  Dispatches on the task kind: classification tasks draw the
+    MNIST-shaped prototype mixture; the reconstruction task draws IoT
+    telemetry and partitions it by device type (each client sees mostly one
+    equipment family — non-IID in the covariates rather than the labels).
+    """
+    from repro.data import (dirichlet_partition, make_classification,
+                            make_iot_telemetry)
     p = spec.task.params
     key = jax.random.PRNGKey(spec.seed)
+    if spec.task.kind == "autoencoder-anomaly":
+        data = make_iot_telemetry(
+            key, n=p.get("n_samples", 2048), dim=p.get("dim", 32),
+            n_types=p.get("n_types", 8), latent=p.get("latent", 4),
+            anomaly_frac=p.get("anomaly_frac", 0.05),
+            noise=p.get("noise", 0.05))
+        parts = dirichlet_partition(key, data.device_type,
+                                    spec.fleet.n_devices,
+                                    alpha=p.get("dirichlet_alpha", 0.5),
+                                    n_classes=p.get("n_types", 8))
+        return data, parts
     data = make_classification(key, n=p.get("n_samples", 4096),
                                dim=p.get("dim", 784))
     parts = dirichlet_partition(key, data.y, spec.fleet.n_devices,

@@ -196,7 +196,9 @@ class FederationSpec:
         registry.TASKS.get(self.task.kind)
         # built-in tasks are scale-specific; custom registrations (tasks or
         # engines) are not checked — they may support either engine protocol
-        scale_of = {"mlp": DEVICE_SCALE, "lm": DATACENTER_SCALE}
+        scale_of = {"mlp": DEVICE_SCALE,
+                    "autoencoder-anomaly": DEVICE_SCALE,
+                    "lm": DATACENTER_SCALE}
         want = scale_of.get(self.task.kind)
         if (want is not None and want != self.scale
                 and self.scale in (DEVICE_SCALE, DATACENTER_SCALE)):

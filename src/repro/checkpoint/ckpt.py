@@ -5,6 +5,19 @@ exactly.  Device arrays are fetched host-side before serialization, so this
 works for sharded trees too (gathers — intended for the example-scale models;
 production sharded checkpointing would write per-shard files, noted in
 DESIGN.md as out of scope for the CPU container).
+
+Two leaf kinds need a dtype marker because npz has no native codec for them:
+
+* bfloat16 leaves store as f32 under a ``__bf16__:`` key prefix;
+* typed JAX PRNG keys (``jax.random.key``-style, extended dtypes the service
+  layer checkpoints as part of a resumable `FleetState`) store their raw
+  ``jax.random.key_data`` under ``__key__:<impl>:`` and are rebuilt with
+  ``jax.random.wrap_key_data`` on load, so the restored key continues the
+  exact random stream.  Raw ``PRNGKey`` uint32 arrays need no marker.
+
+Writes are crash-safe: the archive lands under a ``.tmp`` name and is
+``os.replace``-d into place, so a reader (or a resume after a mid-write
+crash) never sees a torn checkpoint file.
 """
 from __future__ import annotations
 
@@ -18,6 +31,12 @@ import numpy as np
 
 
 _BF16 = "__bf16__:"
+_KEY = "__key__:"
+
+
+def _is_typed_key(leaf) -> bool:
+    return (hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key))
 
 
 def _flatten(tree):
@@ -25,6 +44,13 @@ def _flatten(tree):
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if _is_typed_key(leaf):
+            # typed PRNG keys have an extended dtype npz cannot store:
+            # keep the raw counter words plus the impl name in the marker
+            impl = str(jax.random.key_impl(leaf))
+            flat[f"{_KEY}{impl}:{key}"] = np.asarray(
+                jax.random.key_data(leaf))
+            continue
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             # npz has no bf16 codec: store as f32 with a dtype marker
@@ -37,25 +63,45 @@ def _flatten(tree):
 def save_checkpoint(path: str, step: int, tree: Any) -> str:
     os.makedirs(path, exist_ok=True)
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
-    np.savez(fname, **_flatten(tree))
+    tmp = fname + ".tmp"
+    # write to a sibling temp file and rename into place: os.replace is
+    # atomic on POSIX, so a crash mid-write leaves only the .tmp orphan
+    # (ignored by latest_checkpoint) and never a truncated .npz
+    with open(tmp, "wb") as f:
+        np.savez(f, **_flatten(tree))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, fname)
     return fname
 
 
 def load_checkpoint(fname: str, like: Any) -> Any:
     with np.load(fname) as data:
         flat = {k: data[k] for k in data.files}
+    entries = {}
+    for k, arr in flat.items():
+        if k.startswith(_BF16):
+            entries[k[len(_BF16):]] = ("bf16", None, arr)
+        elif k.startswith(_KEY):
+            impl, path = k[len(_KEY):].split(":", 1)
+            entries[path] = ("key", impl, arr)
+        else:
+            entries[k] = ("raw", None, arr)
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     leaves = []
     for path, leaf in paths:
         key = "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        if _BF16 + key in flat:
-            arr = flat[_BF16 + key].astype(jnp.bfloat16)
+        kind, impl, arr = entries[key]
+        if kind == "key":
+            leaves.append(jax.random.wrap_key_data(jnp.asarray(arr),
+                                                   impl=impl))
+        elif kind == "bf16":
+            leaves.append(jnp.asarray(arr.astype(jnp.bfloat16)))
         else:
-            arr = flat[key]
-        leaves.append(jnp.asarray(
-            arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
+            leaves.append(jnp.asarray(
+                arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

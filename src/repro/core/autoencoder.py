@@ -1,0 +1,91 @@
+"""MLP autoencoder for federated anomaly detection over IoT telemetry.
+
+The first non-classification workload (FedIoT-style, SNIPPETS.md §3): each
+device trains a reconstruction model on its own — mostly normal — telemetry,
+clusters aggregate through the same Eqn-6 trust machinery as the
+classifiers (learning quality and gradient diversity are loss-agnostic),
+and anomalies surface at inference time as samples the global model cannot
+reconstruct.  vmap-friendly functional params, same conventions as
+`repro.core.mlp`.
+
+Evaluation is threshold-free: `anomaly_auc` ranks reconstruction errors
+against the ground-truth anomaly labels (the probability a random anomalous
+sample scores above a random normal one), so the metric does not bake in a
+contamination-rate assumption.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp_autoencoder(key, dim: int, hidden: int = 64, code: int = 8):
+    """dim -> hidden -> code -> hidden -> dim, relu encoder, linear head."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = lambda n: 1.0 / jnp.sqrt(n)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * s(dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, code)) * s(hidden),
+        "b2": jnp.zeros((code,)),
+        "w3": jax.random.normal(k3, (code, hidden)) * s(code),
+        "b3": jnp.zeros((hidden,)),
+        "w4": jax.random.normal(k4, (hidden, dim)) * s(hidden),
+        "b4": jnp.zeros((dim,)),
+    }
+
+
+def encode(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return jax.nn.relu(h @ params["w2"] + params["b2"])
+
+
+def reconstruct(params, x):
+    z = encode(params, x)
+    h = jax.nn.relu(z @ params["w3"] + params["b3"])
+    return h @ params["w4"] + params["b4"]
+
+
+def code_mean(params, x):
+    """tau(t): mean bottleneck activation — the reconstruction task's stand-in
+    for the classifier's hidden-layer mean in the DQN state (§IV-B)."""
+    return encode(params, x).mean()
+
+
+def reconstruction_errors(params, x):
+    """Per-sample mean squared reconstruction error, (N,) — the anomaly
+    score: normal telemetry lies near the learned manifold, faults do not."""
+    r = reconstruct(params, x)
+    return jnp.mean((r - x) ** 2, axis=-1)
+
+
+def reconstruction_loss(params, batch):
+    """Mean squared reconstruction error over the batch.  ``batch['y']``
+    (the anomaly label) is deliberately unused: training is unsupervised,
+    labels exist only for evaluation."""
+    return jnp.mean(reconstruction_errors(params, batch["x"]))
+
+
+def anomaly_auc(scores, labels):
+    """Rank AUC of anomaly scores against binary labels (1 = anomalous).
+
+    Mann-Whitney form: (sum of anomaly ranks − n_pos(n_pos+1)/2) /
+    (n_pos · n_neg), with midranks for ties.  Returns NaN when either class
+    is absent (callers report accuracy as None then).
+    """
+    scores = jnp.asarray(scores, jnp.float32)
+    labels = jnp.asarray(labels)
+    pos = (labels > 0).astype(jnp.float32)
+    n_pos = jnp.sum(pos)
+    n_neg = jnp.sum(1.0 - pos)
+    order = jnp.argsort(scores)
+    sorted_scores = scores[order]
+    base = jnp.arange(1, scores.shape[0] + 1, dtype=jnp.float32)
+    # midranks: average the 1-based positions over each tie group
+    first = jnp.searchsorted(sorted_scores, sorted_scores, side="left")
+    last = jnp.searchsorted(sorted_scores, sorted_scores, side="right")
+    mid = 0.5 * (base[first] + base[last - 1])
+    ranks = jnp.zeros_like(scores).at[order].set(mid)
+    auc = (jnp.sum(ranks * pos) - n_pos * (n_pos + 1.0) / 2.0) / (
+        n_pos * n_neg)
+    return jnp.where((n_pos > 0) & (n_neg > 0), auc, jnp.nan)

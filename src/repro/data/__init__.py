@@ -1,8 +1,10 @@
-from .synthetic import (SyntheticClassification, make_classification,
+from .synthetic import (SyntheticClassification, SyntheticTelemetry,
+                        make_classification, make_iot_telemetry,
                         token_stream, lm_batches)
 from .federated import (dirichlet_partition, federated_batches,
                         padded_partition, sample_member_batch)
 
-__all__ = ["SyntheticClassification", "make_classification", "token_stream",
+__all__ = ["SyntheticClassification", "SyntheticTelemetry",
+           "make_classification", "make_iot_telemetry", "token_stream",
            "lm_batches", "dirichlet_partition", "federated_batches",
            "padded_partition", "sample_member_batch"]

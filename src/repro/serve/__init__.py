@@ -1,0 +1,19 @@
+"""repro.serve — long-running federation service with checkpointed resume.
+
+The batch API (`repro.api.Federation.run`) answers "run this experiment";
+this package answers "keep this federation running": segments of
+`run_scanned(K)` rounds, a full resumable checkpoint after each, a
+streamed JSONL trace, and a file-protocol CLI (``python -m repro.serve``)
+with start / status / checkpoint / resume / stop.  Resume is bit-exact —
+a stopped-and-resumed run continues the precise trace an uninterrupted
+run would have produced (API.md "Service mode").
+"""
+from .runner import (SegmentRunner, latest_resumable, list_resumable,
+                     prune_checkpoints, restore_resumable, save_resumable,
+                     truncate_jsonl_trace)
+from .service import RunDir, run_service, service_status
+
+__all__ = ["SegmentRunner", "latest_resumable", "list_resumable",
+           "prune_checkpoints", "restore_resumable", "save_resumable",
+           "truncate_jsonl_trace", "RunDir", "run_service",
+           "service_status"]

@@ -1,0 +1,266 @@
+"""Service CLI — the long-running federation front end.
+
+    # start the anomaly-detection service in the background
+    PYTHONPATH=src python -m repro.serve start --run-dir /tmp/fl \\
+        --scenario autoencoder-anomaly --segment-rounds 25
+
+    PYTHONPATH=src python -m repro.serve status     --run-dir /tmp/fl
+    PYTHONPATH=src python -m repro.serve checkpoint --run-dir /tmp/fl
+    PYTHONPATH=src python -m repro.serve stop       --run-dir /tmp/fl
+    PYTHONPATH=src python -m repro.serve resume     --run-dir /tmp/fl
+
+``start`` resolves a scenario spec, writes it to ``spec.json``, and
+(by default) re-execs itself as a detached ``start --foreground`` child —
+a spawn, not a fork: forking after jax initializes is unsafe.  The child
+owns the pidfile and the segment loop (`service.run_service`); the parent
+waits for the pidfile and returns.  ``--foreground`` runs the loop in
+this process instead (CI smoke tests, systemd-style supervisors).
+
+``stop`` drops ``control/stop.req`` *and* sends SIGTERM — either alone
+suffices; the loop finishes its current segment, writes a final
+checkpoint, and exits.  ``resume`` continues a stopped run-dir from its
+newest checkpoint, bit-exactly.  ``checkpoint`` on a live service
+requests one and waits for it; on a stopped run-dir it prints the newest
+checkpoint path (exit 1 if none exists).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+from .runner import latest_resumable
+from .service import (CKPT_REQ, LOG_FILE, STOP_REQ, RunDir, pid_alive,
+                      run_service, service_status)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="long-running federation service with checkpointed "
+                    "resume")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p):
+        p.add_argument("--run-dir", required=True,
+                       help="service instance directory")
+        return p
+
+    def loop_flags(p):
+        p.add_argument("--segment-rounds", type=int, default=25,
+                       help="rounds per scanned segment (checkpoint "
+                            "cadence)")
+        p.add_argument("--max-segments", type=int, default=None,
+                       help="stop after N segments (default: run until "
+                            "stopped)")
+        p.add_argument("--keep", type=int, default=3,
+                       help="checkpoints retained on disk (0 = all)")
+        p.add_argument("--foreground", action="store_true",
+                       help="run the loop in this process instead of "
+                            "daemonizing")
+        return p
+
+    p = loop_flags(common(sub.add_parser(
+        "start", help="start a fresh service instance")))
+    p.add_argument("--scenario", default="autoencoder-anomaly",
+                   help="scenario preset for the spec (ignored when the "
+                        "run dir already has spec.json)")
+    p.add_argument("--seed", type=int, default=None)
+    p.add_argument("--spec-file", default=None,
+                   help="JSON spec file instead of --scenario")
+
+    loop_flags(common(sub.add_parser(
+        "resume", help="continue a stopped run from its newest "
+                       "checkpoint")))
+
+    p = common(sub.add_parser("status", help="print service status JSON"))
+    p.add_argument("--tail", type=int, default=5,
+                   help="trace records to include")
+
+    p = common(sub.add_parser(
+        "checkpoint", help="request/locate a checkpoint"))
+    p.add_argument("--timeout", type=float, default=300.0,
+                   help="seconds to wait for a live service to finish "
+                        "its segment")
+
+    p = common(sub.add_parser("stop", help="stop a running service"))
+    p.add_argument("--timeout", type=float, default=300.0,
+                   help="seconds to wait for the final segment + "
+                        "checkpoint")
+    return ap
+
+
+# --------------------------------------------------------------------- #
+def _resolve_spec(args):
+    from repro.api import scenarios  # noqa: F401  (populates SCENARIOS)
+    from repro.api.registry import SCENARIOS
+    from repro.api.spec import FederationSpec
+    if args.spec_file:
+        with open(args.spec_file) as f:
+            spec = FederationSpec.from_dict(json.load(f))
+    else:
+        spec = SCENARIOS.get(args.scenario)()
+    if args.seed is not None:
+        spec = spec.replace(seed=args.seed)
+    return spec.validate()
+
+
+def _loop_argv(args) -> list:
+    argv = ["--run-dir", args.run_dir, "--foreground",
+            "--segment-rounds", str(args.segment_rounds),
+            "--keep", str(args.keep)]
+    if args.max_segments is not None:
+        argv += ["--max-segments", str(args.max_segments)]
+    return argv
+
+
+def _spawn(rd: RunDir, child_argv: list) -> int:
+    """Detach a ``--foreground`` child (spawn, not fork — jax threads)."""
+    with open(rd.path(LOG_FILE), "a") as log:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.serve"] + child_argv,
+            stdout=log, stderr=subprocess.STDOUT,
+            stdin=subprocess.DEVNULL, start_new_session=True)
+    deadline = time.monotonic() + 120.0
+    while time.monotonic() < deadline:
+        if rd.running_pid() == proc.pid:
+            print(f"started pid {proc.pid} run-dir {rd.root}")
+            return 0
+        if proc.poll() is not None:
+            print(f"error: service exited with code {proc.returncode}; "
+                  f"see {rd.path(LOG_FILE)}", file=sys.stderr)
+            return 1
+        time.sleep(0.05)
+    print(f"error: service pid {proc.pid} did not report ready; see "
+          f"{rd.path(LOG_FILE)}", file=sys.stderr)
+    return 1
+
+
+def _refuse_if_running(rd: RunDir) -> bool:
+    pid = rd.running_pid()
+    if pid is not None:
+        print(f"error: service already running (pid {pid}) in {rd.root}",
+              file=sys.stderr)
+        return True
+    return False
+
+
+# --------------------------------------------------------------------- #
+def cmd_start(args) -> int:
+    rd = RunDir(args.run_dir).ensure()
+    if _refuse_if_running(rd):
+        return 1
+    keep = args.keep if args.keep > 0 else None
+    if os.path.exists(rd.spec_path):
+        pass                            # re-exec'd child / explicit reuse
+    else:
+        if latest_resumable(rd.ckpt_dir) is not None:
+            print(f"error: {rd.root} has checkpoints but no spec.json; "
+                  "refusing to guess — use a fresh --run-dir",
+                  file=sys.stderr)
+            return 1
+        try:
+            rd.write_spec(_resolve_spec(args))
+        except (KeyError, ValueError, OSError) as e:
+            print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+            return 1
+    if latest_resumable(rd.ckpt_dir) is not None:
+        print(f"error: {rd.root} already has checkpoints; use "
+              "`python -m repro.serve resume` (or a fresh --run-dir)",
+              file=sys.stderr)
+        return 1
+    if not args.foreground:
+        return _spawn(rd, ["start"] + _loop_argv(args))
+    run_service(rd.root, segment_rounds=args.segment_rounds,
+                max_segments=args.max_segments, keep=keep, resume=False)
+    return 0
+
+
+def cmd_resume(args) -> int:
+    rd = RunDir(args.run_dir)
+    if _refuse_if_running(rd):
+        return 1
+    if latest_resumable(rd.ckpt_dir) is None:
+        print(f"error: no complete checkpoint under {rd.ckpt_dir}",
+              file=sys.stderr)
+        return 1
+    keep = args.keep if args.keep > 0 else None
+    if not args.foreground:
+        return _spawn(rd, ["resume"] + _loop_argv(args))
+    run_service(rd.root, segment_rounds=args.segment_rounds,
+                max_segments=args.max_segments, keep=keep, resume=True)
+    return 0
+
+
+def cmd_status(args) -> int:
+    print(json.dumps(service_status(args.run_dir, tail=args.tail),
+                     indent=2))
+    return 0
+
+
+def cmd_checkpoint(args) -> int:
+    rd = RunDir(args.run_dir)
+    pid = rd.running_pid()
+    before = latest_resumable(rd.ckpt_dir)
+    if pid is None:                     # stopped: just locate the newest
+        if before is None:
+            print(f"error: no complete checkpoint under {rd.ckpt_dir}",
+                  file=sys.stderr)
+            return 1
+        print(before[0])
+        return 0
+    rd.ensure().request(CKPT_REQ)
+    before_step = before[1]["step"] if before else -1
+    deadline = time.monotonic() + args.timeout
+    while time.monotonic() < deadline:
+        now = latest_resumable(rd.ckpt_dir)
+        if now is not None and now[1]["step"] > before_step:
+            print(now[0])
+            return 0
+        if not pid_alive(pid):          # service exited meanwhile: its
+            now = latest_resumable(rd.ckpt_dir)   # farewell ckpt counts
+            if now is not None:
+                print(now[0])
+                return 0
+            break
+        time.sleep(0.2)
+    print("error: timed out waiting for a checkpoint", file=sys.stderr)
+    return 1
+
+
+def cmd_stop(args) -> int:
+    rd = RunDir(args.run_dir)
+    pid = rd.running_pid()
+    if pid is None:
+        print("service not running")
+        return 0
+    rd.ensure().request(STOP_REQ)
+    try:
+        os.kill(pid, signal.SIGTERM)
+    except OSError:
+        pass
+    deadline = time.monotonic() + args.timeout
+    while time.monotonic() < deadline:
+        if not pid_alive(pid):
+            state = rd.read_state() or {}
+            print(f"stopped pid {pid} at round {state.get('rounds')}")
+            return 0
+        time.sleep(0.2)
+    print(f"error: pid {pid} still alive after {args.timeout:.0f}s "
+          "(segment in flight?) — retry or kill -9", file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return {"start": cmd_start, "resume": cmd_resume,
+            "status": cmd_status, "checkpoint": cmd_checkpoint,
+            "stop": cmd_stop}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,221 @@
+"""Segmented execution with checkpointed resume (the service's core loop).
+
+`SegmentRunner` drives `DeviceScaleEngine.run_scanned(K)` in repeated
+K-round segments and checkpoints the **full resumable state** after each:
+
+* the `FleetState` pytree — twins, reputations, channel, cluster/global
+  params, the Eqn-12 Lyapunov backlog, the round counter, and the typed
+  JAX PRNG-key leaf (round-tripped through `repro.checkpoint`'s
+  ``__key__:`` marker so the restored key continues the exact stream);
+* the per-cluster event-time vector `run_scanned` carries across calls;
+* the controller's scan-policy carry (the deployed DQN net; fixed and
+  Lyapunov carries are empty — the backlog lives in `FleetState.queue`);
+* a JSON manifest sidecar with the round counter and the float64 energy
+  tally.  The tally cannot ride in the npz — with x64 disabled a
+  ``jnp.asarray`` round-trip would truncate it to f32 — but Python's JSON
+  repr round-trips doubles exactly, so the manifest is the bit-exact home.
+
+Both files land atomically (``.tmp`` + ``os.replace``); a checkpoint is
+*complete* only when its manifest exists, so `latest_resumable` skips an
+npz whose manifest write was lost to a crash.  Restore builds a **fresh**
+federation from the same spec (device data, cluster assignments, and the
+malicious mask all derive deterministically from ``spec.seed``), then
+overwrites the resumable leaves — after which continuing produces the
+exact trace an uninterrupted segmented run would (`tests/test_serve.py`
+asserts equality down to the f64 energy column).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+_MANIFEST_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _manifest_path(npz_path: str) -> str:
+    return npz_path[: -len(".npz")] + ".json"
+
+
+def _atomic_write_json(path: str, obj: Dict[str, Any]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _resumable_tree(federation) -> Dict[str, Any]:
+    engine = federation.engine
+    tree = dict(engine.resumable_state())          # fleet + event times
+    tree["policy"] = federation.controller.scan_policy().state
+    return tree
+
+
+def save_resumable(federation, ckpt_dir: str, *, segment: int,
+                   keep: Optional[int] = 3) -> str:
+    """Checkpoint a federation's full resumable state; returns the npz path.
+
+    ``keep`` bounds disk use for unbounded runs: after a successful write,
+    all but the newest ``keep`` complete checkpoints are deleted (None
+    keeps everything).
+    """
+    engine = federation.engine
+    step = int(engine.round)
+    fname = save_checkpoint(ckpt_dir, step, _resumable_tree(federation))
+    # manifest second: its presence marks the checkpoint complete, and the
+    # exact-f64 energy tally lives here (npz would truncate it to f32)
+    _atomic_write_json(_manifest_path(fname), {
+        "step": step,
+        "rounds": step,
+        "energy": float(engine.energy_used),
+        "segment": int(segment),
+    })
+    if keep is not None:
+        prune_checkpoints(ckpt_dir, keep=keep)
+    return fname
+
+
+def list_resumable(ckpt_dir: str):
+    """Complete checkpoints (npz + manifest) in the directory, oldest
+    first, as ``(step, npz_path)`` pairs."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        m = _MANIFEST_RE.match(f)
+        if not m:
+            continue
+        path = os.path.join(ckpt_dir, f)
+        if os.path.exists(_manifest_path(path)):
+            out.append((int(m.group(1)), path))
+    return sorted(out)
+
+
+def latest_resumable(ckpt_dir: str
+                     ) -> Optional[Tuple[str, Dict[str, Any]]]:
+    """Newest complete checkpoint as ``(npz_path, manifest)``, or None."""
+    ckpts = list_resumable(ckpt_dir)
+    if not ckpts:
+        return None
+    path = ckpts[-1][1]
+    with open(_manifest_path(path)) as f:
+        return path, json.load(f)
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    for _, path in list_resumable(ckpt_dir)[:-keep or None]:
+        for victim in (path, _manifest_path(path)):
+            try:
+                os.remove(victim)
+            except OSError:
+                pass
+
+
+def restore_resumable(federation, ckpt_dir: str) -> Dict[str, Any]:
+    """Restore a federation to the newest checkpoint; returns its manifest.
+
+    The federation must have been built from the *same spec* (same seed:
+    data, assignments, and masks regenerate deterministically) — only the
+    resumable leaves are overwritten.
+    """
+    found = latest_resumable(ckpt_dir)
+    if found is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    path, manifest = found
+    tree = load_checkpoint(path, like=_resumable_tree(federation))
+    federation.engine.restore_resumable(
+        {"fleet": tree["fleet"], "times": tree["times"]},
+        rounds=manifest["rounds"], energy=manifest["energy"])
+    restore_policy = getattr(federation.controller,
+                             "restore_policy_state", None)
+    if restore_policy is not None:      # DQN: adopt the deployed net
+        restore_policy(tree["policy"])
+    return manifest
+
+
+def truncate_jsonl_trace(path: str, max_round: int) -> int:
+    """Drop trace records newer than the checkpoint being resumed from.
+
+    A crash can land between trace appends and the segment checkpoint;
+    on resume the re-run segment would then duplicate those rounds.  The
+    file is rewritten through a temp + ``os.replace`` keeping records with
+    ``round <= max_round`` (streaming, so multi-GB traces stay cheap).
+    Returns the number of dropped records; a missing file is a no-op.
+    """
+    if not os.path.exists(path):
+        return 0
+    tmp = path + ".tmp"
+    dropped = 0
+    with open(path) as src, open(tmp, "w") as dst:
+        for line in src:
+            stripped = line.strip()
+            if not stripped:
+                continue
+            try:
+                rec = json.loads(stripped)
+            except json.JSONDecodeError:
+                dropped += 1            # torn final line from a crash
+                continue
+            if rec.get("round", 0) > max_round:
+                dropped += 1
+                continue
+            dst.write(stripped + "\n")
+        dst.flush()
+        os.fsync(dst.fileno())
+    os.replace(tmp, path)
+    return dropped
+
+
+class SegmentRunner:
+    """Run a federation in checkpointed K-round segments.
+
+    Thin and synchronous — the service layer owns signals, pidfiles, and
+    status; tests drive this class directly for the bit-parity guarantees.
+    """
+
+    def __init__(self, federation, ckpt_dir: str, *,
+                 segment_rounds: int = 25, keep: Optional[int] = 3,
+                 eval_final: bool = True):
+        self.federation = federation
+        self.ckpt_dir = str(ckpt_dir)
+        self.segment_rounds = int(segment_rounds)
+        self.keep = keep
+        self.eval_final = eval_final
+        self.segment = 0
+
+    # ------------------------------------------------------------------ #
+    def maybe_resume(self) -> Optional[Dict[str, Any]]:
+        """Adopt the newest checkpoint if one exists; returns its manifest
+        (None for a fresh start)."""
+        if latest_resumable(self.ckpt_dir) is None:
+            return None
+        manifest = restore_resumable(self.federation, self.ckpt_dir)
+        self.segment = int(manifest.get("segment", 0))
+        return manifest
+
+    def run_segment(self):
+        """One K-round scanned segment followed by a checkpoint."""
+        trace = self.federation.engine.run_scanned(
+            self.segment_rounds, eval_final=self.eval_final)
+        self.segment += 1
+        self.checkpoint()
+        return trace
+
+    def checkpoint(self) -> str:
+        return save_resumable(self.federation, self.ckpt_dir,
+                              segment=self.segment, keep=self.keep)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def rounds(self) -> int:
+        return int(self.federation.engine.round)
+
+    @property
+    def energy(self) -> float:
+        return float(self.federation.engine.energy_used)

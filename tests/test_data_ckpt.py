@@ -82,3 +82,54 @@ def test_checkpoint_roundtrip():
             assert a.dtype == b.dtype
             np.testing.assert_allclose(np.asarray(a, np.float32),
                                        np.asarray(b, np.float32))
+
+
+def test_checkpoint_typed_prng_key_continues_the_stream():
+    """A typed PRNG-key leaf round-trips through the ``__key__:`` marker
+    and the restored key draws the exact same stream."""
+    key = jax.random.fold_in(jax.random.key(7), 3)
+    tree = {"key": key, "w": jnp.ones((2,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        got = load_checkpoint(save_checkpoint(d, 0, tree), tree)
+    restored = got["key"]
+    assert jnp.issubdtype(restored.dtype, jax.dtypes.prng_key)
+    assert str(jax.random.key_impl(restored)) \
+        == str(jax.random.key_impl(key))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(restored)),
+        np.asarray(jax.random.key_data(key)))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.normal(restored, (8,))),
+        np.asarray(jax.random.normal(key, (8,))))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_checkpoint_fleetstate_like_tree_property(seed, n, m):
+    """FleetState-shaped trees — mixed f32/bf16/int/scalar leaves plus a
+    typed key — round-trip with dtypes and bits intact."""
+    k = jax.random.PRNGKey(seed)
+    tree = {"params": {"w": jax.random.normal(k, (n, m)),
+                       "h": jax.random.normal(k, (m,)).astype(jnp.bfloat16)},
+            "queue": jnp.asarray(float(n) * 1.5, jnp.float32),
+            "round": jnp.asarray(seed % 97, jnp.int32),
+            "key": jax.random.fold_in(jax.random.key(seed), n)}
+    with tempfile.TemporaryDirectory() as d:
+        got = load_checkpoint(save_checkpoint(d, seed % 100, tree), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_write_is_atomic():
+    """No ``.tmp`` survivor after a save, and an orphaned ``.tmp`` from a
+    crashed writer is invisible to `latest_checkpoint`."""
+    tree = {"w": jnp.ones((3,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        f = save_checkpoint(d, 1, tree)
+        assert os.listdir(d) == [os.path.basename(f)]
+        with open(os.path.join(d, "ckpt_00000009.npz.tmp"), "wb") as fh:
+            fh.write(b"torn half-written archive")
+        assert latest_checkpoint(d) == f
