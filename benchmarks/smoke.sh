@@ -46,6 +46,19 @@ python -m repro.serve status --run-dir "$SERVE_DIR" --tail 1 \
 print('serve:', s['status'], 'rounds', s['rounds'], 'acc', s['last_acc'])"
 rm -rf "$SERVE_DIR"
 
+echo "== chaos harness (SIGKILL mid-segment, supervised recovery) =="
+CHAOS_DIR=$(mktemp -d /tmp/serve_chaos.XXXXXX)
+python -m repro.serve chaos --run-dir "$CHAOS_DIR" \
+    --scenario autoencoder-anomaly --segment-rounds 3 --total-segments 3 \
+    --kills 1 | python -c "import json,sys; s=json.load(sys.stdin); \
+print('chaos:', s['segments'], 'segments,', s['rounds'], 'rounds,', \
+s['kills'], 'kills,', s['restarts'], 'restarts')"
+rm -rf "$CHAOS_DIR"
+
+echo "== robustness grid (fault mode x aggregator, fast) =="
+python benchmarks/attack_bench.py --fast --out=/tmp/bench_robustness.json \
+    | tail -n 8
+
 echo "== segmented checkpointed execution (serve overhead, fast) =="
 python benchmarks/engine_bench.py --segmented --fast
 

@@ -33,14 +33,15 @@ from .registry import (AGGREGATORS, CONTROLLERS, ENGINES, SCENARIOS, TASKS,
                        register_engine, register_scenario, register_task)
 from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
                    ControllerSpec, DATACENTER_SCALE, DEVICE_SCALE,
-                   FederationSpec, FleetSpec, PrivacySpec, ShardingSpec,
-                   TaskSpec, legacy_spec)
+                   FaultSpec, FederationSpec, FleetSpec, PrivacySpec,
+                   ShardingSpec, TaskSpec, legacy_spec)
 from . import scenarios  # noqa: F401  (populates SCENARIOS presets)
 
 __all__ = [
     "Federation", "FederationSpec", "FleetState", "FLTrace", "RoundRecord",
     "FleetSpec", "ClusteringSpec", "ControllerSpec", "AggregatorSpec",
-    "TaskSpec", "PrivacySpec", "ChannelSpec", "ShardingSpec", "legacy_spec",
+    "TaskSpec", "PrivacySpec", "ChannelSpec", "ShardingSpec", "FaultSpec",
+    "legacy_spec",
     "DEVICE_SCALE", "DATACENTER_SCALE",
     "Engine", "DeviceScaleEngine", "DatacenterEngine",
     "Placement", "SINGLE_DEVICE", "resolve_placement",

@@ -102,6 +102,7 @@ from repro.core.twin import (calibrate, calibrated_freq, init_twins,
                              member_view, observe_round_members,
                              sample_deviation, TwinState)
 from repro.data.federated import padded_partition, sample_member_batch
+from repro.faults import FaultModel
 
 from . import placement as placement_lib
 from .components import ControllerCtx
@@ -212,6 +213,20 @@ class DeviceScaleEngine:
             self.malicious[np.asarray(jax.random.choice(
                 km, n, (n_mal,), replace=False))] = True
         self._malicious_dev = jnp.asarray(self.malicious, jnp.float32)
+
+        # declarative fault injection (spec.faults -> pure-jnp round
+        # transforms); the default spec is inert and the gating below is
+        # *static*, so fault-free runs compile the exact pre-fault round
+        self.faults = FaultModel(spec.faults, n)
+        self._sentinel = jnp.int32(n)   # padded-membership fill index
+        # the Eqn-4 interaction tallies treat the fault model's static
+        # Byzantine subsets exactly like the label-flip attackers: each
+        # round a misbehaving member's beta count grows, so reputation —
+        # not just the per-round FoolsGold signals — learns persistent
+        # attackers (inert spec: both subsets are zero, nothing changes)
+        self._misbehaving_dev = jnp.maximum(
+            self._malicious_dev,
+            jnp.maximum(self.faults.corrupt_dev, self.faults.poison_dev))
 
         gp = task.init(kp, dim=data.x.shape[1])
         cparams = jax.tree.map(
@@ -366,10 +381,28 @@ class DeviceScaleEngine:
         fixed-shape member slice (padded with the sentinel n, or exact)."""
         spec = self.spec
         task = self.task
+        fm = self.faults
         twins = state.twins
+        # an active fault model splits one extra key; inert specs keep the
+        # exact pre-fault stream (and compile the exact pre-fault program —
+        # every fm.may_* gate below is a static Python bool)
+        if fm.active:
+            key, kb, ke, kc2, kdp, kflt = jax.random.split(state.key, 6)
+        else:
+            key, kb, ke, kc2, kdp = jax.random.split(state.key, 5)
+            kflt = None
+        if fm.may_drop:
+            # dropped members leave the padded mask AND become the padding
+            # sentinel, so every downstream gather fills neutrally and
+            # every scatter (reputation, twin observe) drops them — the
+            # round treats a dropped device exactly like a padding slot
+            mask = fm.drop_mask(kflt, mask)
+            members = jnp.where(mask, members, self._sentinel)
         mask_f = mask.astype(jnp.float32)
         cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
-        key, kb, ke, kc2, kdp = jax.random.split(state.key, 5)
+        # a fully-dropped cluster skips its event: state carries unchanged
+        # (the degenerate all-padding aggregate would zero the cluster row)
+        empty = jnp.sum(mask_f) < 0.5 if fm.may_drop else None
 
         # --- controller choice capped by the Alg.-2 tolerance bound.
         # T_m is the fastest cluster's time for the *requested* local phase
@@ -393,6 +426,11 @@ class DeviceScaleEngine:
                                   members, spec.local_batch)
         x = self._x[sel]
         y = self._y[sel]
+        if fm.may_poison:
+            # poisons the sampled features before they enter local_train;
+            # for reconstruction tasks (corrupt_labels a no-op) this is the
+            # only attack surface that touches the loss
+            x = fm.poison_inputs(kflt, x, members)
         mal_m = self._malicious_dev.at[members].get(mode="fill",
                                                     fill_value=0.0)
         y = jnp.where(mal_m[:, None] > 0.5, task.corrupt_labels(y), y)
@@ -404,13 +442,21 @@ class DeviceScaleEngine:
             lambda l: jnp.broadcast_to(l[c], (m_dim,) + l.shape[1:]),
             state.cluster_params)
         new = task.local_train(stacked, batch, spec.lr, a)
+        if fm.may_corrupt:
+            # Byzantine members replace their honest deltas *before* the
+            # trust chain sees them — Eqns 4-5 must earn their keep
+            new = fm.corrupt_updates(kflt, new, stacked, members)
 
         # --- trust update (Eqns 4-5) & pluggable aggregation (Eqn 6)
         upd_flat = _flatten_params(new) - _flatten_params(stacked)
         q = learning_quality(upd_flat, mask)
         div = gradient_diversity(upd_flat, mask)
-        b = belief(member_view(twins, members), q, spec.channel.pkt_fail,
-                   div)
+        tw_m = member_view(twins, members)
+        if fm.may_spike:
+            # amplified f̂ deviation feeds straight into Eqn 4's
+            # 1/(1+|Δf̂|) normalization
+            tw_m = fm.spike_twins(kflt, tw_m, mask)
+        b = belief(tw_m, q, spec.channel.pkt_fail, div)
         rep_m = update_reputation(
             state.rep.at[members].get(mode="fill", fill_value=1.0), b,
             spec.channel.pkt_fail, spec.iota)
@@ -442,7 +488,7 @@ class DeviceScaleEngine:
         e = round_energy(a.astype(jnp.float32), true_freq, ch_m, ke) * mask_f
         consumed = jnp.sum(e)
         twins = observe_round_members(twins, members, losses, e,
-                                      self._malicious_dev)
+                                      self._misbehaving_dev)
         if spec.fleet.calibrate_dt:
             twins = calibrate(twins)
         channel = step_channel(kc2, state.channel, self._trans)
@@ -465,6 +511,20 @@ class DeviceScaleEngine:
         cparams = jax.tree.map(lambda L, g: L.at[c].set(g.astype(L.dtype)),
                                cparams, gparams)
 
+        if fm.may_drop:
+            # graceful degradation: a fully-dropped cluster spends nothing
+            # and leaves every model/trust/twin leaf untouched — only the
+            # RNG key, channel, and round counter advance, so the scheduler
+            # re-enqueues the cluster instead of writing a zeroed aggregate
+            revert = lambda old, newv: jax.tree.map(
+                lambda o, v: jnp.where(empty, o, v), old, newv)
+            consumed = jnp.where(empty, 0.0, consumed)
+            twins = revert(state.twins, twins)
+            rep = revert(state.rep, rep)
+            cparams = revert(state.cluster_params, cparams)
+            gparams = revert(state.global_params, gparams)
+            ts = revert(state.cluster_ts, ts)
+
         # --- Eqn 12: the deficit queue advances in-jit with the realized
         # consumption (budgetless controllers have per_slot=inf -> q = 0)
         queue = ctl_queue.advance(state.queue, consumed,
@@ -473,6 +533,8 @@ class DeviceScaleEngine:
         # --- round duration from the *post-calibration* straggler freq
         dur = a.astype(jnp.float32) / jnp.maximum(
             self._cluster_freq_table(twins)[c], 1e-6)
+        if fm.may_straggle:
+            dur = fm.straggle(kflt, dur, mask)
 
         new_state = FleetState(
             twins=twins, rep=rep, channel=channel, cluster_params=cparams,

@@ -9,8 +9,9 @@ from __future__ import annotations
 
 from .registry import register_scenario
 from .spec import (AggregatorSpec, ChannelSpec, ClusteringSpec,
-                   ControllerSpec, DATACENTER_SCALE, FederationSpec,
-                   FleetSpec, PrivacySpec, ShardingSpec, TaskSpec)
+                   ControllerSpec, DATACENTER_SCALE, FaultSpec,
+                   FederationSpec, FleetSpec, PrivacySpec, ShardingSpec,
+                   TaskSpec)
 
 
 @register_scenario("sync-baseline")
@@ -31,6 +32,22 @@ def _byzantine() -> FederationSpec:
         controller=ControllerSpec("fixed", {"a": 5}),
         aggregator=AggregatorSpec("trust"),
         sim_seconds=15.0)
+
+
+@register_scenario("faulty-fleet")
+def _faulty_fleet() -> FederationSpec:
+    """Declarative fault injection inside the jitted round: device dropout,
+    stragglers, twin-deviation spikes, and sign-flip Byzantine corruption,
+    with trust aggregation absorbing the damage (`repro.faults`)."""
+    return FederationSpec(
+        fleet=FleetSpec(n_devices=16),
+        clustering=ClusteringSpec(n_clusters=2),
+        controller=ControllerSpec("fixed", {"a": 5}),
+        aggregator=AggregatorSpec("trust"),
+        faults=FaultSpec(dropout=0.15, straggler_frac=0.125,
+                         twin_spike_prob=0.1, corrupt_mode="sign_flip",
+                         corrupt_frac=0.25, corrupt_scale=4.0),
+        execution="scanned", rounds=30, sim_seconds=1e9)
 
 
 @register_scenario("dp")

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
+from repro.faults.spec import FaultSpec
+
 from . import registry
 
 DEVICE_SCALE = "device"          # discrete-event simulator over the MLP task
@@ -174,6 +176,7 @@ class FederationSpec:
     privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
     channel: ChannelSpec = dataclasses.field(default_factory=ChannelSpec)
     sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     sim_seconds: float = 60.0        # device scale: simulated wall-clock
     rounds: int = 20                 # global rounds (datacenter scale, and
                                      # the K of device-scale "scanned" runs)
@@ -215,6 +218,11 @@ class FederationSpec:
                 "scale (the fl_step modes manage their own sharding)")
         self.sharding.validate(self.fleet.n_devices,
                                self.clustering.n_clusters)
+        self.faults.validate()
+        if self.faults.active and self.scale == DATACENTER_SCALE:
+            raise ValueError(
+                "faults: fault injection is device-scale only (the "
+                "datacenter fl_step modes have no fault model)")
         if self.scale == DATACENTER_SCALE:
             # fl_step implements Eqn-6 trust weighting inside the jit-ed
             # step; robust rules and DP have no datacenter implementation
@@ -288,6 +296,7 @@ _NESTED = {
     ("FederationSpec", "privacy"): PrivacySpec,
     ("FederationSpec", "channel"): ChannelSpec,
     ("FederationSpec", "sharding"): ShardingSpec,
+    ("FederationSpec", "faults"): FaultSpec,
 }
 
 

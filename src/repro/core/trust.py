@@ -77,7 +77,13 @@ def belief(twins: TwinState, quality, pkt_fail, diversity=None) -> jnp.ndarray:
     inter = twins.alpha / (twins.alpha + twins.beta + _EPS)
     b = (1.0 - pkt_fail) * quality / (1.0 + fdev) * inter
     if diversity is not None:
-        b = b * diversity
+        # bounded FoolsGold factor (1+d)/2 in [1/2, 1]: coordinated sybils
+        # (d -> 0) still lose half their belief, but a well-aligned honest
+        # fleet (near-IID reconstruction gradients, d at the eps clip) no
+        # longer hands a divergent-direction attacker (d -> 1) an
+        # unbounded multiplicative advantage — found by the fault-injection
+        # bench, where raw-d trust *collapsed* under input poisoning
+        b = b * 0.5 * (1.0 + diversity)
     return b
 
 

@@ -1,0 +1,14 @@
+"""repro.faults — declarative, in-jit fault injection.
+
+`FaultSpec` (on `FederationSpec.faults`) declares per-round device dropout,
+straggler delay, digital-twin deviation spikes, Byzantine update
+corruption, and input poisoning as data; `FaultModel` compiles it into
+pure-jnp transformations the device engine applies *inside* the fused
+round — one fault program for the event-heap, scanned, and mesh-sharded
+execution paths.  The default spec is inert: the engine compiles the exact
+pre-fault round, bit for bit.
+"""
+from .model import FaultModel
+from .spec import CORRUPT_MODES, FaultSpec
+
+__all__ = ["FaultSpec", "FaultModel", "CORRUPT_MODES"]

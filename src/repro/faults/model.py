@@ -1,0 +1,183 @@
+"""`FaultModel`: the in-jit compilation of a `FaultSpec`.
+
+Built once at engine init, applied inside `DeviceScaleEngine._fleet_round`
+— every method here is pure jnp over fixed shapes, so the fault program
+traces into the fused per-event round, the `lax.scan`-over-rounds lowering,
+and the mesh-sharded jits alike (the static device-subset tables ride
+along as captured constants, exactly like the engine's malicious mask).
+
+Randomness discipline: the engine hands each round one fault key ``kf``
+(split off the `FleetState` key only when the spec is active, so inert
+specs consume the exact pre-fault RNG stream), and each fault family folds
+a fixed tag into it — families never perturb each other's draws, and
+toggling one family leaves the others' realizations unchanged at a fixed
+fault seed.
+
+The Byzantine subsets (update corruption / input poisoning) are *static*:
+``int(frac * n)`` devices drawn once from ``FaultSpec.seed`` at build time,
+mirroring the engine's ``malicious_frac`` machinery — a compromised device
+stays compromised, which is what gives the Eqn-4/5 reputation its signal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import FaultSpec
+
+# per-family fold_in tags: stable, so enabling one family never shifts
+# another family's per-round draws
+_TAG_DROP, _TAG_STRAGGLE, _TAG_SPIKE, _TAG_CORRUPT, _TAG_POISON = range(5)
+
+
+def _static_subset(rng: np.random.Generator, n: int, frac: float
+                   ) -> jnp.ndarray:
+    """(n,) f32 indicator of a fixed ``int(frac*n)``-device subset."""
+    out = np.zeros((n,), np.float32)
+    k = int(frac * n)
+    if k:
+        out[rng.choice(n, size=k, replace=False)] = 1.0
+    return jnp.asarray(out)
+
+
+class FaultModel:
+    """Pure-jnp fault transformations for one fleet (see module docstring).
+
+    Mirrors the `FaultSpec` ``may_*``/``active`` flags so the engine can
+    gate each family *statically* — a disabled family contributes zero ops
+    (and zero RNG consumption) to the compiled round.
+    """
+
+    def __init__(self, spec: FaultSpec, n_devices: int):
+        self.spec = spec.validate()
+        self.n = int(n_devices)
+        # the two Byzantine subsets draw from independent streams of the
+        # fault seed so enabling poisoning never reshuffles the corrupters
+        self.corrupt_dev = _static_subset(
+            np.random.default_rng((spec.seed, _TAG_CORRUPT)), self.n,
+            spec.corrupt_frac if spec.may_corrupt else 0.0)
+        self.poison_dev = _static_subset(
+            np.random.default_rng((spec.seed, _TAG_POISON)), self.n,
+            spec.poison_frac if spec.may_poison else 0.0)
+        # fold the fault seed into every per-round key so two FaultSpecs
+        # differing only in `seed` realize different fault streams against
+        # the same federation randomness
+        self._seed = int(spec.seed)
+
+    # convenience mirrors ---------------------------------------------- #
+    @property
+    def active(self) -> bool:
+        return self.spec.active
+
+    @property
+    def may_drop(self) -> bool:
+        return self.spec.may_drop
+
+    @property
+    def may_straggle(self) -> bool:
+        return self.spec.may_straggle
+
+    @property
+    def may_spike(self) -> bool:
+        return self.spec.may_spike
+
+    @property
+    def may_corrupt(self) -> bool:
+        return self.spec.may_corrupt
+
+    @property
+    def may_poison(self) -> bool:
+        return self.spec.may_poison
+
+    # ------------------------------------------------------------------ #
+    # in-jit per-round transformations (kf: the round's fault key)
+    # ------------------------------------------------------------------ #
+    def _key(self, kf, tag: int):
+        return jax.random.fold_in(jax.random.fold_in(kf, self._seed), tag)
+
+    def drop_mask(self, kf, mask: jnp.ndarray) -> jnp.ndarray:
+        """Bernoulli(dropout) participation failure per member slot."""
+        u = jax.random.uniform(self._key(kf, _TAG_DROP), mask.shape)
+        return mask & (u >= self.spec.dropout)
+
+    def straggle(self, kf, dur, mask: jnp.ndarray):
+        """Any straggling member multiplies the cluster round duration by
+        ``straggler_factor`` — the straggler gates the synchronous local
+        phase, matching Alg. 2's min-frequency convention."""
+        u = jax.random.uniform(self._key(kf, _TAG_STRAGGLE), mask.shape)
+        st = (u < self.spec.straggler_frac) & mask
+        return dur * jnp.where(jnp.any(st),
+                               jnp.float32(self.spec.straggler_factor),
+                               jnp.float32(1.0))
+
+    def spike_twins(self, kf, tw_m, mask: jnp.ndarray):
+        """Amplify the DT mapping deviation f̂ of spiked members in the
+        (M,)-sliced twin view feeding Eqn 4 — the trust rule's
+        deviation-normalized belief is what must absorb this."""
+        u = jax.random.uniform(self._key(kf, _TAG_SPIKE),
+                               tw_m.freq_dev.shape)
+        sp = (u < self.spec.twin_spike_prob) & mask
+        scale = jnp.float32(self.spec.twin_spike_scale)
+        return tw_m._replace(
+            freq_dev=jnp.where(sp, tw_m.freq_dev * scale, tw_m.freq_dev))
+
+    def corrupt_updates(self, kf, new, stacked, members):
+        """Byzantine update corruption on the static corrupt subset,
+        applied to the per-member *deltas* (new - stacked) before trust /
+        aggregation, via the same gather-with-fill the padded round uses
+        everywhere (padding sentinels gather weight 0)."""
+        cz = self.corrupt_dev.at[members].get(mode="fill", fill_value=0.0)
+        kc = self._key(kf, _TAG_CORRUPT)
+        mode = self.spec.corrupt_mode
+        scale = self.spec.corrupt_scale
+        flat_new, treedef = jax.tree_util.tree_flatten(new)
+        flat_old = jax.tree_util.tree_leaves(stacked)
+        out = []
+        for i, (nl, sl) in enumerate(zip(flat_new, flat_old)):
+            upd = nl - sl
+            if mode == "sign_flip":
+                # scaled sign flip: the classic model-replacement attack
+                # pushes against the honest direction, amplified
+                bad = -upd * jnp.asarray(scale, upd.dtype)
+            elif mode == "scaled_norm":
+                bad = upd * jnp.asarray(scale, upd.dtype)
+            else:                                       # gaussian
+                # noise sized relative to each member's own update norm
+                # (raw per-element noise over the full parameter vector is
+                # ~sqrt(P) times the update and vaporizes the model in one
+                # round — no aggregator could demonstrate recovery)
+                axes = tuple(range(1, upd.ndim))
+                nrm = jnp.sqrt(jnp.sum(upd * upd, axis=axes,
+                                       keepdims=True) + 1e-12)
+                sz = float(np.prod(upd.shape[1:])) or 1.0
+                noise = jax.random.normal(jax.random.fold_in(kc, i),
+                                          upd.shape, upd.dtype)
+                bad = upd + (jnp.asarray(scale, upd.dtype) * nrm
+                             / jnp.asarray(np.sqrt(sz), upd.dtype)) * noise
+            w = cz.reshape((-1,) + (1,) * (upd.ndim - 1)).astype(upd.dtype)
+            out.append(sl + upd + w * (bad - upd))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def poison_inputs(self, kf, x, members):
+        """Fixed-pattern input poisoning on the static poison subset: each
+        poisoned device adds ``poison_scale`` times its own frozen random
+        bias vector to every feature it trains on — a miscalibrated /
+        stuck-sensor model.  A *consistent* bias is the damaging variant:
+        the model can (and does) learn it, dragging the decision surface,
+        where fresh per-round noise would average out to a no-op.  For
+        reconstruction tasks (labels never in the loss) this is the only
+        attack surface; the defense signals are the poisoned members'
+        mutually-aligned divergent gradients (Eqn 4 quality + FoolsGold)
+        and the accumulating negative-interaction tally."""
+        pz = self.poison_dev.at[members].get(mode="fill", fill_value=0.0)
+        feat = x.shape[-1]
+        # per-device patterns derive from the build-time seed only — the
+        # same device injects the same bias every round
+        patterns = jax.random.normal(
+            jax.random.PRNGKey(self._seed * 2654435761 % (2**31)),
+            (self.n + 1, feat), x.dtype)
+        p_m = patterns.at[jnp.clip(members, 0, self.n)].get()
+        w = pz.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        bias = p_m.reshape((p_m.shape[0],) + (1,) * (x.ndim - 2) + (feat,))
+        return x + w * jnp.asarray(self.spec.poison_scale, x.dtype) * bias

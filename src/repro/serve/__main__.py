@@ -21,7 +21,15 @@ suffices; the loop finishes its current segment, writes a final
 checkpoint, and exits.  ``resume`` continues a stopped run-dir from its
 newest checkpoint, bit-exactly.  ``checkpoint`` on a live service
 requests one and waits for it; on a stopped run-dir it prints the newest
-checkpoint path (exit 1 if none exists).
+checkpoint path (exit 1 if none exists).  ``chaos`` runs the supervised
+crash-recovery harness (`chaos.py`).
+
+Waiting commands (``checkpoint --wait`` semantics, ``stop``) poll with
+capped exponential backoff instead of a tight fixed sleep, and a timeout
+exits with the dedicated code ``EXIT_TIMEOUT`` (3) so supervisors can
+tell "still busy" from "failed".  All commands tolerate the stale
+pidfile a SIGKILLed daemon leaves behind (`RunDir.running_pid` cleans
+it), so a chaos-killed run dir is immediately resumable.
 """
 from __future__ import annotations
 
@@ -36,6 +44,27 @@ import time
 from .runner import latest_resumable
 from .service import (CKPT_REQ, LOG_FILE, STOP_REQ, RunDir, pid_alive,
                       run_service, service_status)
+
+EXIT_TIMEOUT = 3                        # waited past --timeout; retryable
+
+
+def _poll(predicate, timeout: float, *, first: float = 0.05,
+          cap: float = 1.0):
+    """Poll ``predicate`` with capped exponential backoff until it returns
+    non-None or ``timeout`` elapses.  Returns the predicate's value, or
+    None on timeout.  The backoff keeps short waits snappy (50 ms first
+    check) without hammering the filesystem during a long segment."""
+    deadline = time.monotonic() + timeout
+    delay = first
+    while True:
+        val = predicate()
+        if val is not None:
+            return val
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            return None
+        time.sleep(min(delay, remaining, cap))
+        delay = min(delay * 2.0, cap)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -91,6 +120,22 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--timeout", type=float, default=300.0,
                    help="seconds to wait for the final segment + "
                         "checkpoint")
+
+    p = common(sub.add_parser(
+        "chaos", help="supervised crash-recovery harness: run to N "
+                      "segments, SIGKILLing the service along the way"))
+    p.add_argument("--scenario", default="autoencoder-anomaly")
+    p.add_argument("--seed", type=int, default=None)
+    p.add_argument("--spec-file", default=None)
+    p.add_argument("--segment-rounds", type=int, default=5)
+    p.add_argument("--total-segments", type=int, default=4,
+                   help="verified segments to reach before exiting")
+    p.add_argument("--kills", type=int, default=2,
+                   help="SIGKILL injections before letting it finish")
+    p.add_argument("--keep", type=int, default=0,
+                   help="checkpoints retained (0 = all)")
+    p.add_argument("--max-restarts", type=int, default=8,
+                   help="consecutive no-progress restarts tolerated")
     return ap
 
 
@@ -215,21 +260,28 @@ def cmd_checkpoint(args) -> int:
         return 0
     rd.ensure().request(CKPT_REQ)
     before_step = before[1]["step"] if before else -1
-    deadline = time.monotonic() + args.timeout
-    while time.monotonic() < deadline:
+
+    def fresh_ckpt():
         now = latest_resumable(rd.ckpt_dir)
         if now is not None and now[1]["step"] > before_step:
-            print(now[0])
-            return 0
+            return now
         if not pid_alive(pid):          # service exited meanwhile: its
             now = latest_resumable(rd.ckpt_dir)   # farewell ckpt counts
-            if now is not None:
-                print(now[0])
-                return 0
-            break
-        time.sleep(0.2)
-    print("error: timed out waiting for a checkpoint", file=sys.stderr)
-    return 1
+            return now if now is not None else ("dead",)
+        return None
+
+    got = _poll(fresh_ckpt, args.timeout)
+    if got is None:
+        print(f"error: no checkpoint within {args.timeout:.0f}s (segment "
+              "in flight?) — retry with a larger --timeout",
+              file=sys.stderr)
+        return EXIT_TIMEOUT
+    if got == ("dead",):
+        print("error: service died without leaving a checkpoint",
+              file=sys.stderr)
+        return 1
+    print(got[0])
+    return 0
 
 
 def cmd_stop(args) -> int:
@@ -243,23 +295,42 @@ def cmd_stop(args) -> int:
         os.kill(pid, signal.SIGTERM)
     except OSError:
         pass
-    deadline = time.monotonic() + args.timeout
-    while time.monotonic() < deadline:
-        if not pid_alive(pid):
-            state = rd.read_state() or {}
-            print(f"stopped pid {pid} at round {state.get('rounds')}")
-            return 0
-        time.sleep(0.2)
+    gone = _poll(lambda: (True if not pid_alive(pid) else None),
+                 args.timeout)
+    if gone:
+        state = rd.read_state() or {}
+        print(f"stopped pid {pid} at round {state.get('rounds')}")
+        return 0
     print(f"error: pid {pid} still alive after {args.timeout:.0f}s "
           "(segment in flight?) — retry or kill -9", file=sys.stderr)
-    return 1
+    return EXIT_TIMEOUT
+
+
+def cmd_chaos(args) -> int:
+    from .chaos import run_supervised
+    rd = RunDir(args.run_dir)
+    if _refuse_if_running(rd):
+        return 1
+    try:
+        summary = run_supervised(
+            args.run_dir, total_segments=args.total_segments,
+            segment_rounds=args.segment_rounds, kills=args.kills,
+            keep=args.keep, scenario=args.scenario,
+            spec_file=args.spec_file, seed=args.seed,
+            max_restarts=args.max_restarts,
+            log=lambda m: print(m, file=sys.stderr))  # stdout: JSON only
+    except RuntimeError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    print(json.dumps(summary, indent=2))
+    return 0
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     return {"start": cmd_start, "resume": cmd_resume,
             "status": cmd_status, "checkpoint": cmd_checkpoint,
-            "stop": cmd_stop}[args.cmd](args)
+            "stop": cmd_stop, "chaos": cmd_chaos}[args.cmd](args)
 
 
 if __name__ == "__main__":

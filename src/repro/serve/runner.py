@@ -17,7 +17,12 @@ K-round segments and checkpoints the **full resumable state** after each:
 
 Both files land atomically (``.tmp`` + ``os.replace``); a checkpoint is
 *complete* only when its manifest exists, so `latest_resumable` skips an
-npz whose manifest write was lost to a crash.  Restore builds a **fresh**
+npz whose manifest write was lost to a crash.  The manifest additionally
+records the npz's byte size and CRC32 content digest; `latest_resumable`
+walks newest-first and returns the first checkpoint whose bytes still
+match (``verify_checkpoint``), so a truncated or bit-rotted npz degrades
+to the previous good checkpoint instead of a crash-loop on restore.
+Restore builds a **fresh**
 federation from the same spec (device data, cluster assignments, and the
 malicious mask all derive deterministically from ``spec.seed``), then
 overwrites the resumable leaves — after which continuing produces the
@@ -29,6 +34,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
@@ -49,6 +55,41 @@ def _atomic_write_json(path: str, obj: Dict[str, Any]) -> None:
     os.replace(tmp, path)
 
 
+def _file_digest(path: str) -> Tuple[int, int]:
+    """(byte size, CRC32) of a file, streamed in 1 MiB chunks."""
+    size, crc = 0, 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            size += len(chunk)
+            crc = zlib.crc32(chunk, crc)
+    return size, crc & 0xFFFFFFFF
+
+
+def verify_checkpoint(npz_path: str) -> bool:
+    """True when the npz's bytes still match its manifest digest.
+
+    Legacy manifests (pre-digest) verify by existence alone — they were
+    written before the integrity field, and rejecting them would strand
+    old runs.  A missing npz or manifest is corrupt, not legacy.
+    """
+    mpath = _manifest_path(npz_path)
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    if "crc32" not in manifest:
+        return os.path.exists(npz_path)
+    try:
+        size, crc = _file_digest(npz_path)
+    except OSError:
+        return False
+    return (size == manifest.get("bytes") and crc == manifest["crc32"])
+
+
 def _resumable_tree(federation) -> Dict[str, Any]:
     engine = federation.engine
     tree = dict(engine.resumable_state())          # fleet + event times
@@ -67,13 +108,17 @@ def save_resumable(federation, ckpt_dir: str, *, segment: int,
     engine = federation.engine
     step = int(engine.round)
     fname = save_checkpoint(ckpt_dir, step, _resumable_tree(federation))
-    # manifest second: its presence marks the checkpoint complete, and the
-    # exact-f64 energy tally lives here (npz would truncate it to f32)
+    # manifest second: its presence marks the checkpoint complete, the
+    # exact-f64 energy tally lives here (npz would truncate it to f32),
+    # and the digest is what restore verifies the npz bytes against
+    size, crc = _file_digest(fname)
     _atomic_write_json(_manifest_path(fname), {
         "step": step,
         "rounds": step,
         "energy": float(engine.energy_used),
         "segment": int(segment),
+        "bytes": size,
+        "crc32": crc,
     })
     if keep is not None:
         prune_checkpoints(ckpt_dir, keep=keep)
@@ -98,18 +143,28 @@ def list_resumable(ckpt_dir: str):
 
 def latest_resumable(ckpt_dir: str
                      ) -> Optional[Tuple[str, Dict[str, Any]]]:
-    """Newest complete checkpoint as ``(npz_path, manifest)``, or None."""
-    ckpts = list_resumable(ckpt_dir)
-    if not ckpts:
-        return None
-    path = ckpts[-1][1]
-    with open(_manifest_path(path)) as f:
-        return path, json.load(f)
+    """Newest *verified* checkpoint as ``(npz_path, manifest)``, or None.
+
+    Walks newest-first, skipping any checkpoint whose npz bytes no longer
+    match the manifest digest — the automatic fallback that lets a service
+    resume from the last good state after a torn or corrupted write."""
+    for _, path in reversed(list_resumable(ckpt_dir)):
+        if verify_checkpoint(path):
+            with open(_manifest_path(path)) as f:
+                return path, json.load(f)
+    return None
 
 
 def prune_checkpoints(ckpt_dir: str, keep: int) -> None:
-    """Delete all but the newest ``keep`` complete checkpoints."""
-    for _, path in list_resumable(ckpt_dir)[:-keep or None]:
+    """Delete all but the newest ``keep`` *verified* checkpoints.
+
+    Corrupt checkpoints are deleted outright (they can never be restored),
+    so after pruning the ``keep`` newest survivors are all restorable."""
+    verified = [p for _, p in list_resumable(ckpt_dir)
+                if verify_checkpoint(p)]
+    doomed = verified[:-keep or None]
+    doomed += [p for _, p in list_resumable(ckpt_dir) if p not in verified]
+    for path in doomed:
         for victim in (path, _manifest_path(path)):
             try:
                 os.remove(victim)

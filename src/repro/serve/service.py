@@ -146,9 +146,15 @@ class RunDir:
             pass
 
     def running_pid(self) -> Optional[int]:
-        """Pid of a live service process, ignoring stale pidfiles."""
+        """Pid of a live service process; a stale pidfile (SIGKILLed
+        daemon never reaches its ``finally`` cleanup) is removed so the
+        run dir is immediately restartable."""
         pid = self.read_pid()
-        return pid if pid_alive(pid) else None
+        if pid_alive(pid):
+            return pid
+        if pid is not None:
+            self.clear_pid()
+        return None
 
     # control drop-box ------------------------------------------------- #
     def request(self, name: str) -> None:

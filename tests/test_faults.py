@@ -1,0 +1,217 @@
+"""Fault-injection layer: spec round-trip, in-jit fault semantics on both
+execution paths, graceful degradation under total dropout, and the trust
+pipeline actually penalizing the injected Byzantine subsets."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # container image has no hypothesis
+    from _propcheck import given, settings, strategies as st
+
+from repro.api import (AggregatorSpec, ClusteringSpec, ControllerSpec,
+                       Federation, FederationSpec, FleetSpec, TaskSpec)
+from repro.core.clustering import ensure_nonempty
+from repro.faults import CORRUPT_MODES, FaultModel, FaultSpec
+
+
+def _spec(faults=None, **kw):
+    base = dict(
+        fleet=FleetSpec(n_devices=8),
+        clustering=ClusteringSpec(n_clusters=2),
+        controller=ControllerSpec("fixed", {"a": 3}),
+        aggregator=AggregatorSpec("trust"),
+        execution="scanned", rounds=6, sim_seconds=1e9, local_batch=16,
+        seed=3)
+    base.update(kw)
+    spec = FederationSpec(**base)
+    if faults is not None:
+        spec = dataclasses.replace(spec, faults=faults)
+    return spec
+
+
+# --------------------------------------------------------------------- #
+# spec: dict round-trip + validation
+# --------------------------------------------------------------------- #
+def test_fault_spec_roundtrip():
+    fs = FaultSpec(dropout=0.2, straggler_frac=0.1, twin_spike_prob=0.05,
+                   corrupt_mode="gaussian", corrupt_frac=0.25,
+                   poison_frac=0.125, seed=4)
+    spec = _spec(faults=fs)
+    back = FederationSpec.from_dict(spec.to_dict())
+    assert back.faults == fs
+    assert back == spec
+
+
+def test_default_fault_spec_is_inert():
+    fs = FederationSpec().faults
+    assert fs == FaultSpec()
+    assert not fs.active
+    m = FaultModel(fs, 8)
+    assert not (m.may_drop or m.may_straggle or m.may_spike
+                or m.may_corrupt or m.may_poison)
+
+
+@pytest.mark.parametrize("bad", [
+    {"corrupt_mode": "bitflip"},
+    {"dropout": 1.5},
+    {"straggler_frac": -0.1},
+    {"corrupt_scale": -1.0, "corrupt_mode": "gaussian",
+     "corrupt_frac": 0.5},
+])
+def test_fault_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec(**bad).validate()
+
+
+def test_datacenter_scale_rejects_active_faults():
+    spec = FederationSpec.from_dict(_spec().to_dict())  # device scale ok
+    spec = dataclasses.replace(
+        spec, scale="datacenter",
+        task=TaskSpec("lm", {"seq": 8, "micro_batch": 1}),
+        faults=FaultSpec(dropout=0.5))
+    with pytest.raises(ValueError, match="faults"):
+        spec.validate()
+
+
+def test_corrupt_modes_exported():
+    assert "sign_flip" in CORRUPT_MODES and "none" in CORRUPT_MODES
+
+
+# --------------------------------------------------------------------- #
+# engine semantics
+# --------------------------------------------------------------------- #
+def test_event_and_scanned_paths_agree_under_faults():
+    """The fault program is part of the fused round, so the event-heap and
+    lax.scan lowerings of a faulty federation stay in lockstep."""
+    fs = FaultSpec(dropout=0.25, straggler_frac=0.25, twin_spike_prob=0.2,
+                   corrupt_mode="sign_flip", corrupt_frac=0.25,
+                   poison_frac=0.25, seed=2)
+    ev = Federation.from_spec(_spec(faults=fs)).run()
+    sc = Federation.from_spec(_spec(faults=fs)).run_scanned(6)
+    assert [r.a for r in ev.records[:6]] == [r.a for r in sc.records[:6]]
+    np.testing.assert_allclose(
+        [r.loss for r in ev.records[:6]],
+        [r.loss for r in sc.records[:6]], rtol=1e-6)
+    np.testing.assert_allclose(
+        [r.energy for r in ev.records[:6]],
+        [r.energy for r in sc.records[:6]], rtol=1e-6)
+
+
+def test_total_dropout_carries_state_gracefully():
+    """dropout=1.0 drops every member of every round: the engine must skip
+    the events (params, twins, reputation unchanged; zero energy) instead
+    of writing the degenerate all-padding aggregate."""
+    fed = Federation.from_spec(_spec(faults=FaultSpec(dropout=1.0)))
+    g0 = jax.tree.map(jnp.copy, fed.engine.global_params)
+    rep0 = jnp.copy(fed.engine.rep)
+    tr = fed.run_scanned(6)
+    assert all(np.isfinite(r.loss) for r in tr.records)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 g0, fed.engine.global_params)
+    np.testing.assert_array_equal(rep0, fed.engine.rep)
+    assert float(fed.engine.energy_used) == 0.0
+    # the scheduler still advances: rounds were consumed, not deadlocked
+    assert int(fed.engine.round) == 6
+
+
+def test_partial_dropout_still_trains():
+    tr = Federation.from_spec(
+        _spec(faults=FaultSpec(dropout=0.3, seed=1))).run_scanned(6)
+    assert all(np.isfinite(r.loss) for r in tr.records)
+    assert tr.records[-1].energy > 0.0
+
+
+def test_straggler_inflates_round_duration():
+    slow = Federation.from_spec(_spec(faults=FaultSpec(
+        straggler_frac=1.0, straggler_factor=8.0))).run_scanned(6)
+    fast = Federation.from_spec(_spec()).run_scanned(6)
+    # identical rounds, identical controller — only the wall-clock of each
+    # event is stretched by the straggler factor
+    assert slow.times[-1] > 4.0 * fast.times[-1]
+
+
+def test_corrupt_devices_lose_reputation():
+    fs = FaultSpec(corrupt_mode="sign_flip", corrupt_frac=0.25,
+                   corrupt_scale=4.0, seed=5)
+    fed = Federation.from_spec(_spec(faults=fs, rounds=12))
+    bad = np.asarray(fed.engine.faults.corrupt_dev) > 0.5
+    assert bad.sum() == 2               # 0.25 * 8 devices
+    fed.run_scanned(12)
+    rep = np.asarray(fed.engine.rep)
+    assert rep[bad].mean() < rep[~bad].mean()
+
+
+def test_poisoned_devices_lose_reputation():
+    fs = FaultSpec(poison_frac=0.25, poison_scale=8.0, seed=5)
+    fed = Federation.from_spec(_spec(faults=fs, rounds=12))
+    bad = np.asarray(fed.engine.faults.poison_dev) > 0.5
+    assert bad.sum() == 2
+    fed.run_scanned(12)
+    rep = np.asarray(fed.engine.rep)
+    assert rep[bad].mean() < rep[~bad].mean()
+
+
+def test_poison_is_deterministic_per_device():
+    """The poison bias is frozen per device: two engines built from the
+    same spec inject identical patterns (resume-safety for serve)."""
+    fs = FaultSpec(poison_frac=0.5, poison_scale=2.0, seed=7)
+    a = Federation.from_spec(_spec(faults=fs)).run_scanned(6)
+    b = Federation.from_spec(_spec(faults=fs)).run_scanned(6)
+    assert [r.loss for r in a.records] == [r.loss for r in b.records]
+
+
+def test_fault_seed_changes_realization():
+    f1 = Federation.from_spec(
+        _spec(faults=FaultSpec(dropout=0.5, seed=1))).run_scanned(6)
+    f2 = Federation.from_spec(
+        _spec(faults=FaultSpec(dropout=0.5, seed=2))).run_scanned(6)
+    assert [r.loss for r in f1.records] != [r.loss for r in f2.records]
+
+
+def test_autoencoder_poisoning_runs_in_jit():
+    """Input poisoning on the reconstruction task (corrupt_labels no-op):
+    the acceptance workload for the robustness bench."""
+    spec = _spec(
+        faults=FaultSpec(poison_frac=0.375, poison_scale=4.0),
+        task=TaskSpec("autoencoder-anomaly",
+                      {"n_samples": 512, "dim": 16, "n_types": 4,
+                       "hidden": 32, "code": 4}),
+        local_batch=16, lr=0.1)
+    tr = Federation.from_spec(spec).run_scanned(6)
+    assert all(np.isfinite(r.loss) for r in tr.records)
+
+
+# --------------------------------------------------------------------- #
+# graceful-degradation property: ensure_nonempty edge cases
+# --------------------------------------------------------------------- #
+class TestEnsureNonemptyProperty:
+    @given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 10 ** 6))
+    @settings(max_examples=25, deadline=None)
+    def test_every_cluster_nonempty(self, n, k, seed):
+        k = min(k, n)
+        rng = np.random.default_rng(seed)
+        assign = rng.integers(0, k, size=n)
+        fixed = ensure_nonempty(assign, k)
+        counts = np.bincount(fixed, minlength=k)
+        assert (counts >= 1).all()
+        assert fixed.shape == (n,)
+        assert ((fixed >= 0) & (fixed < k)).all()
+
+    def test_rejects_more_clusters_than_devices(self):
+        with pytest.raises(ValueError):
+            ensure_nonempty(np.zeros(3, np.int64), 4)
+
+    @given(st.integers(2, 16), st.integers(0, 10 ** 6))
+    @settings(max_examples=10, deadline=None)
+    def test_degenerate_single_cluster_assignment(self, k, seed):
+        """All devices piled on one cluster — the k-means failure mode the
+        dropout fault can mimic at runtime — redistributes to k nonempty."""
+        n = k + int(np.random.default_rng(seed).integers(0, 8))
+        assign = np.zeros(n, np.int64)
+        fixed = ensure_nonempty(assign, k)
+        assert (np.bincount(fixed, minlength=k) >= 1).all()

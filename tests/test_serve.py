@@ -20,7 +20,9 @@ from repro.api.records import (JsonlSink, read_jsonl_trace, tail_jsonl)
 from repro.checkpoint import load_checkpoint
 from repro.data import dirichlet_partition, make_classification
 from repro.serve import (SegmentRunner, latest_resumable, restore_resumable,
-                         save_resumable, truncate_jsonl_trace)
+                         save_resumable, truncate_jsonl_trace,
+                         verify_checkpoint)
+from repro.serve.chaos import run_supervised
 from repro.serve.service import RunDir, service_status
 
 
@@ -160,6 +162,65 @@ def test_incomplete_checkpoint_is_skipped(tmp_path):
     assert latest_resumable(str(tmp_path))[0] == complete
 
 
+def test_corrupt_checkpoint_falls_back_to_verified(tmp_path):
+    """A truncated npz (torn write / bit rot) fails its manifest CRC and
+    resume silently falls back to the previous verified checkpoint."""
+    data, parts = _data(seed=6)
+    spec = _spec(ControllerSpec("fixed", {"a": 1}), seed=6)
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    runner = SegmentRunner(fed, str(tmp_path), segment_rounds=2, keep=None)
+    runner.run_segment()
+    good, good_manifest = latest_resumable(str(tmp_path))
+    runner.run_segment()
+    newest, _ = latest_resumable(str(tmp_path))
+    assert newest != good and verify_checkpoint(newest)
+
+    # truncate the newest npz: manifest intact, bytes no longer match
+    with open(newest, "r+b") as f:
+        f.truncate(os.path.getsize(newest) // 2)
+    assert not verify_checkpoint(newest)
+    path, manifest = latest_resumable(str(tmp_path))
+    assert path == good and manifest == good_manifest
+
+    # restore actually loads the fallback (round counter proves which)
+    fed2 = Federation.from_spec(spec, data=data, parts=parts)
+    assert restore_resumable(fed2, str(tmp_path))["rounds"] == 2
+
+    # pruning deletes the corrupt newest outright, keeps the verified one
+    from repro.serve import prune_checkpoints
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert not os.path.exists(newest)
+    assert os.path.exists(good)
+
+
+def test_legacy_manifest_without_digest_still_verifies(tmp_path):
+    """Pre-digest manifests (no crc32 field) verify by existence, so old
+    run dirs remain resumable."""
+    data, parts = _data(seed=7)
+    spec = _spec(ControllerSpec("fixed", {"a": 1}), seed=7)
+    fed = Federation.from_spec(spec, data=data, parts=parts)
+    fed.engine.run_scanned(2, eval_final=False)
+    npz = save_resumable(fed, str(tmp_path), segment=1)
+    mpath = npz[:-len(".npz")] + ".json"
+    manifest = json.load(open(mpath))
+    for k in ("crc32", "bytes"):
+        manifest.pop(k)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    assert verify_checkpoint(npz)
+    assert latest_resumable(str(tmp_path))[0] == npz
+
+
+def test_stale_pidfile_is_cleaned(tmp_path):
+    """A SIGKILLed daemon leaves its pidfile; running_pid must treat the
+    dead pid as not-running AND remove the stale file."""
+    rd = RunDir(str(tmp_path)).ensure()
+    with open(rd.path("serve.pid"), "w") as f:
+        f.write("999999999")            # beyond pid_max: never alive
+    assert rd.running_pid() is None
+    assert not os.path.exists(rd.path("serve.pid"))
+
+
 # --------------------------------------------------------------------- #
 # JSONL plumbing
 # --------------------------------------------------------------------- #
@@ -242,6 +303,53 @@ def test_service_cli_lifecycle(tmp_path, capsys):
     # `resume` on an empty dir is a config error, not a traceback
     assert main(["resume", "--run-dir", str(tmp_path / "empty"),
                  "--foreground"]) == 1
+
+
+# --------------------------------------------------------------------- #
+# chaos: SIGKILL mid-segment, supervised recovery
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind,params", CONTROLLERS,
+                         ids=[k for k, _ in CONTROLLERS])
+def test_chaos_sigkill_recovery_trace_parity(tmp_path, monkeypatch,
+                                             kind, params):
+    """SIGKILL the service after a checkpoint lands (next segment in
+    flight), let the supervisor restart it, and byte-compare the final
+    trace.jsonl against an uninterrupted run of the same spec: recovery
+    must be invisible in the output, for every controller."""
+    import repro.serve
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(repro.serve.__file__))))
+    monkeypatch.setenv(
+        "PYTHONPATH",
+        src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    from repro.serve.__main__ import main
+
+    spec = _spec(ControllerSpec(kind, dict(params)), seed=13)
+    spec_file = str(tmp_path / "spec.json")
+    with open(spec_file, "w") as f:
+        json.dump(spec.to_dict(), f)
+
+    # uninterrupted reference, in-process
+    ref = str(tmp_path / "ref")
+    assert main(["start", "--run-dir", ref, "--spec-file", spec_file,
+                 "--segment-rounds", "2", "--max-segments", "3",
+                 "--keep", "0", "--foreground"]) == 0
+
+    # chaos run: subprocess children under the supervisor, one SIGKILL
+    chaos = str(tmp_path / "chaos")
+    summary = run_supervised(
+        chaos, total_segments=3, segment_rounds=2, kills=1, keep=0,
+        spec_file=spec_file, log=lambda *a, **k: None)
+    assert summary["segments"] == 3
+    assert summary["kills"] == 1
+    assert summary["restarts"] >= 1
+
+    with open(os.path.join(ref, "trace.jsonl")) as fa, \
+            open(os.path.join(chaos, "trace.jsonl")) as fb:
+        assert fa.read() == fb.read()
+    st = service_status(chaos)
+    assert not st["alive"]
+    assert st["checkpoint_manifest"]["rounds"] == 6
 
 
 def test_rundir_pid_and_requests(tmp_path):
