@@ -32,10 +32,13 @@ per-round host syncs.
 ``--sharded`` benches the placement layer: the same `run_scanned(K)`
 workload on the single-device fallback vs a `ShardingSpec(mesh=(M,))`
 host mesh (default M=8; force a CPU device pool with
-XLA_FLAGS=--xla_force_host_platform_device_count=M).  On one physical CPU
-the mesh adds partitioning/collective overhead rather than speed — the
-recorded ratio is the cost of the placement plumbing at n_devices >= 256,
-the configuration real multi-host meshes scale capacity with.
+XLA_FLAGS=--xla_force_host_platform_device_count=M).  A 1-D mesh now
+resolves to the cluster-major `shard_map` engine
+(`repro.api.cluster_engine`): memberships are shard-local by layout and
+the round's only collectives are two psums, so the recorded ratio is the
+real cost/benefit of splitting one CPU into M shards — it superseded the
+0.17x the GSPMD-inferred path recorded (all-gathers on every membership
+gather; still measurable via ``ShardingSpec(impl='gspmd')``).
 
 ``--segmented`` benches service-mode execution (`repro.serve`): S
 segments of `run_scanned(K)` each followed by a full resumable checkpoint
@@ -380,14 +383,16 @@ def run_shard_bench(args):
             "bench": "DeviceScaleEngine run_scanned rounds/sec: "
                      "ShardingSpec mesh placement vs the single-device "
                      "fallback",
-            "note": "sharded = FleetState device/cluster leaf groups "
-                    "partitioned over a host-device mesh via jit "
-                    "in_shardings/out_shardings (zero per-round host "
-                    "syncs, trace parity with single-device); on one "
-                    "physical CPU the forced host pool measures placement "
-                    "overhead (collectives between shards of the same "
-                    "chip), not a speedup — the mesh exists for multi-host "
-                    "capacity scaling",
+            "note": "sharded = the cluster-major shard_map engine "
+                    "(repro.api.cluster_engine): fleet re-indexed so "
+                    "memberships are shard-local, explicit jax.shard_map "
+                    "round with exactly two psums (Eqn-19 average + packed "
+                    "scalar metrics), zero all-gathers (HLO-pinned by "
+                    "tests/test_cluster_engine.py).  Supersedes the 0.17x "
+                    "this file recorded for the GSPMD-inferred path, which "
+                    "stays selectable via ShardingSpec(impl='gspmd'); see "
+                    "BENCH_capacity.json for the n_devices=10^4..10^6 "
+                    "capacity curve",
             "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
             "device": str(jax.devices()[0]),
             "device_count": jax.device_count(),
@@ -445,14 +450,45 @@ def run_segmented_bench(args):
         seg_dt = min(_timed(run_segments) for _ in range(3))
         ckpt_dt = min(_timed(runner.checkpoint) for _ in range(3))
 
+    # per-scan sync cost, isolated from checkpointing: S segments with the
+    # default per-scan device_get + trace build vs the same S segments
+    # with no sink and retention off, where run_scanned queues each
+    # segment's consumed stack device-side and the host f64 tally is
+    # rebuilt only at the final host-facing read (energy_used)
+    fed3 = Federation.from_spec(spec, data=data, parts=parts)
+    fed3.engine.run_scanned(K, eval_final=False)          # compile + warm
+
+    def run_synced():
+        for _ in range(S):
+            fed3.engine.run_scanned(K, eval_final=False)
+
+    synced_dt = min(_timed(run_synced) for _ in range(5))
+
+    fed4 = Federation.from_spec(spec, data=data, parts=parts)
+    fed4.engine.set_trace_sink(None, retain=False)
+    fed4.engine.run_scanned(K, eval_final=False)          # compile + warm
+
+    def run_deferred():
+        for _ in range(S):
+            fed4.engine.run_scanned(K, eval_final=False)
+        fed4.engine.energy_used                 # one flush per S segments
+
+    deferred_dt = min(_timed(run_deferred) for _ in range(5))
+
     straight_rps = S * K / straight_dt
     seg_rps = S * K / seg_dt
+    synced_rps = S * K / synced_dt
+    deferred_rps = S * K / deferred_dt
     overhead = (seg_dt - straight_dt) / S
     print(f"engine,straight_scan_rounds_per_sec,{straight_rps:.2f}")
     print(f"engine,segmented_rounds_per_sec,{seg_rps:.2f}")
+    print(f"engine,synced_segments_rounds_per_sec,{synced_rps:.2f}")
+    print(f"engine,deferred_sync_rounds_per_sec,{deferred_rps:.2f}")
     print(f"engine,checkpoint_seconds_per_segment,{ckpt_dt:.4f}")
     print(f"engine,segment_overhead_seconds,{overhead:.4f} "
           f"(K={K}, {S} segments)")
+    print(f"engine,deferred_vs_synced_ratio,"
+          f"{deferred_rps / synced_rps:.3f}x")
 
     if not args.fast:
         payload = {
@@ -474,9 +510,19 @@ def run_segmented_bench(args):
             "dim": args.dim,
             "straight_scan_rounds_per_sec": round(straight_rps, 2),
             "segmented_rounds_per_sec": round(seg_rps, 2),
+            "synced_segments_rounds_per_sec": round(synced_rps, 2),
+            "deferred_sync_rounds_per_sec": round(deferred_rps, 2),
             "checkpoint_seconds_per_segment": round(ckpt_dt, 4),
             "segment_overhead_seconds": round(overhead, 4),
             "throughput_ratio": round(seg_rps / straight_rps, 3),
+            "deferred_vs_synced_ratio": round(deferred_rps / synced_rps, 3),
+            "deferred_note": "synced = S bare run_scanned(K) calls with "
+                             "the default per-scan device_get + trace "
+                             "build; deferred = the same S segments with "
+                             "no sink and retention off — run_scanned "
+                             "queues consumed stacks device-side and "
+                             "flushes once at the first host-facing read "
+                             "(energy_used / checkpoint)",
         }
         with open(args.seg_out, "w") as f:
             json.dump(payload, f, indent=2)

@@ -69,4 +69,7 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.api.run --scenario adaptive-scanned --rounds 6 \
     --devices 8 --clusters 2 --mesh 8 | tail -n 3
 
+echo "== capacity curve + 2-process jax.distributed parity (fast) =="
+python benchmarks/capacity_bench.py --fast
+
 echo "smoke OK"

@@ -108,7 +108,13 @@ from . import placement as placement_lib
 from .components import ControllerCtx
 from .records import FLTrace, RoundRecord
 from .registry import register_engine
-from .spec import DATACENTER_SCALE, DEVICE_SCALE, FederationSpec
+from .spec import (DATACENTER_SCALE, DEVICE_SCALE, FederationSpec,
+                   SHARD_MAP_IMPL)
+
+# the jit-sharded GSPMD path stays registry-selectable under its own scale
+# (`DeviceScaleEngine.from_spec` also routes back to it via
+# ``ShardingSpec.impl='gspmd'``)
+GSPMD_DEVICE_SCALE = "device-gspmd"
 
 
 def _flatten_params(tree):
@@ -179,8 +185,8 @@ class DeviceScaleEngine:
 
     def __init__(self, spec: FederationSpec, data, parts, *,
                  controller, aggregator, task,
-                 fused: Optional[bool] = None):
-        assert spec.scale == DEVICE_SCALE
+                 fused: Optional[bool] = None, assign=None):
+        assert spec.scale in (DEVICE_SCALE, GSPMD_DEVICE_SCALE)
         self.spec = spec
         self.data = data
         self.parts = parts
@@ -188,10 +194,13 @@ class DeviceScaleEngine:
         self.aggregator = aggregator
         self.task = task
         # where the fleet lives: a jax.sharding mesh resolved from the
-        # spec, or the single-device fallback (shardings all None)
+        # spec, or the single-device fallback (shardings all None).  This
+        # engine is the jit-sharded GSPMD path, so the placement validates
+        # under that impl's (stricter, divisible) rules even when the spec
+        # resolves to shard_map by default.
         self.placement = placement_lib.resolve(
             spec.sharding, n_devices=spec.fleet.n_devices,
-            n_clusters=spec.clustering.n_clusters)
+            n_clusters=spec.clustering.n_clusters, impl="gspmd")
 
         n = spec.fleet.n_devices
         C = spec.clustering.n_clusters
@@ -202,7 +211,11 @@ class DeviceScaleEngine:
         twins = sample_deviation(kd, init_twins(kt, n), spec.fleet.dt_max_dev)
         sizes = jnp.asarray([len(p) for p in parts], jnp.float32)
         twins = twins._replace(data_size=sizes)
-        assign, _ = cluster_devices(kc, twins, C)
+        if assign is None:
+            # kc is always split so an assignment override (capacity
+            # benchmarks skip the O(n*C) k-means) leaves every other
+            # stream in the engine untouched
+            assign, _ = cluster_devices(kc, twins, C)
         self.assign = ensure_nonempty(np.asarray(assign), C)
         self._member_table, self._member_mask = padded_membership(
             self.assign, C)
@@ -287,6 +300,12 @@ class DeviceScaleEngine:
         # `consumed` scalar crosses to the host anyway); a float32 device
         # accumulator would drop sub-ulp additions on long simulations
         self._energy_used = 0.0
+        # sink-less scanned segments defer that sync: per-segment consumed
+        # stacks queue device-side in `_pending` and the f32 tally carries
+        # in `_energy_dev` until something host-visible (a trace, the
+        # energy_used property, a checkpoint) flushes them
+        self._pending = []
+        self._energy_dev = jnp.float32(0.0)
         # per-cluster event times carried *across* run_scanned calls, so
         # run_scanned(K) twice continues exactly where run_scanned(2K)
         # would be — the invariant the checkpointed service mode
@@ -308,11 +327,24 @@ class DeviceScaleEngine:
     @classmethod
     def from_spec(cls, spec: FederationSpec, *, controller, aggregator,
                   task, data=None, parts=None,
-                  fused: Optional[bool] = None) -> "DeviceScaleEngine":
+                  fused: Optional[bool] = None,
+                  assign=None) -> "DeviceScaleEngine":
         if data is None or parts is None:
             data, parts = default_device_data(spec)
+        # 1-D meshes default to the cluster-major shard_map engine (the
+        # membership-local path); impl='gspmd' or the 'device-gspmd' scale
+        # keeps the jit-sharded fallback.  `cls is` so the subclasses
+        # (gspmd pin, cluster-major itself) never re-dispatch.
+        if (cls is DeviceScaleEngine and spec.sharding.is_sharded
+                and spec.sharding.resolved_impl() == SHARD_MAP_IMPL):
+            from .cluster_engine import ClusterMajorEngine
+            return ClusterMajorEngine(
+                spec, data, parts, controller=controller,
+                aggregator=aggregator, task=task, fused=fused,
+                assign=assign)
         return cls(spec, data, parts, controller=controller,
-                   aggregator=aggregator, task=task, fused=fused)
+                   aggregator=aggregator, task=task, fused=fused,
+                   assign=assign)
 
     # ------------------------------------------------------------------ #
     # streamed traces + resumable state (the `repro.serve` surface)
@@ -340,6 +372,7 @@ class DeviceScaleEngine:
         times.  Host-side scalars (round counter, f64 energy tally) ride in
         the checkpoint manifest instead — f64 would not survive an f32
         npz/jnp round-trip with x64 disabled."""
+        self._flush_pending()           # manifest energy must be exact
         return {"fleet": self.state, "times": self._scan_times}
 
     def restore_resumable(self, tree: dict, *, rounds: int,
@@ -353,6 +386,8 @@ class DeviceScaleEngine:
         self._scan_times = jnp.asarray(tree["times"], jnp.float32)
         self._rounds = int(rounds)
         self._energy_used = float(energy)
+        self._pending = []
+        self._energy_dev = jnp.float32(energy)
         sync_queue = getattr(self.controller, "sync_queue", None)
         if sync_queue is not None:      # host controller adopts the
             sync_queue(self.state.queue)  # restored Eqn-12 backlog
@@ -709,22 +744,65 @@ class DeviceScaleEngine:
         fn = self._scan_cache.get(K)
         if fn is None:
             fn = self._scan_cache[K] = self._build_scan_fn(K, pol)
-        (state, times, _, _), ys = fn(
+        (state, times, _, energy_end), ys = fn(
             self.state, self._scan_times, pol.state,
-            jnp.float32(self._energy_used))
+            self._scan_energy_start())
         self.state = state
         self._scan_times = times        # schedule carries to the next call
-        ys = jax.device_get(ys)             # the one end-of-run sync
+        return self._emit_scanned_trace(ys, K, eval_final, energy_end)
+
+    # ------------------------------------------------------------------ #
+    # scanned-trace emission + the deferred host sync behind it
+    # ------------------------------------------------------------------ #
+    def _scan_energy_start(self) -> jnp.ndarray:
+        """The f32 energy tally a scan segment starts from.  While segments
+        are pending, the device-side carry continues (one f32 stream, no
+        host round-trip); a flushed engine re-seeds from the exact f64
+        tally so a fresh scan matches the event loop bit for bit."""
+        return self._energy_dev if self._pending else jnp.float32(
+            self._energy_used)
+
+    def _flush_pending(self) -> None:
+        """Fold deferred per-segment consumed stacks into the host f64
+        tally — the same sequential additions the per-scan sync performs,
+        just batched across segments."""
+        if not self._pending:
+            return
+        pend, self._pending = self._pending, []
+        for chunk in jax.device_get(pend):
+            for ci in np.asarray(chunk, np.float32):
+                self._energy_used += float(ci)
+
+    def _emit_scanned_trace(self, ys, K: int, eval_final: bool,
+                            energy_end) -> FLTrace:
+        """Turn a scan segment's stacked device metrics into a trace.
+
+        Fast path: with no trace sink attached, retention off, and no
+        final evaluation (the `repro.serve` segment loop between
+        checkpoints), nothing here is host-visible — the segment's
+        consumed stack is queued instead of synced and the f32 energy
+        carry stays device-side, so back-to-back segments run without a
+        per-segment `device_get`.  Anything host-facing flushes first.
+        """
         base = self._rounds
         self._rounds += K
+        sync_queue = getattr(self.controller, "sync_queue", None)
+        if (self.trace_sink is None and not self.trace_retain
+                and not eval_final):
+            self._pending.append(ys["consumed"])
+            self._energy_dev = energy_end
+            if sync_queue is not None:
+                sync_queue(self.state.queue)
+            return self._new_trace()
 
+        self._flush_pending()
+        ys = jax.device_get(ys)             # the one end-of-run sync
         # rebuild the float64 tally by the same sequential additions the
         # event loop performs (bitwise-identical cumulative energies)
         cum = []
         for ci in np.asarray(ys["consumed"], np.float32):
             self._energy_used += float(ci)
             cum.append(self._energy_used)
-        sync_queue = getattr(self.controller, "sync_queue", None)
         if sync_queue is not None:          # host controller adopts the
             sync_queue(self.state.queue)    # device-resident backlog
 
@@ -751,6 +829,7 @@ class DeviceScaleEngine:
             K = max_rounds if max_rounds is not None else self.spec.rounds
             return self.run_scanned(K)
         spec = self.spec
+        self._flush_pending()   # the event loop tallies energy per round
         trace = self._new_trace()
         events = [(0.0, c) for c in range(spec.clustering.n_clusters)]
         heapq.heapify(events)
@@ -808,6 +887,7 @@ class DeviceScaleEngine:
 
     @property
     def energy_used(self) -> float:
+        self._flush_pending()
         return self._energy_used
 
     @property
@@ -936,7 +1016,15 @@ def default_device_data(spec: FederationSpec):
     return data, parts
 
 
+class DeviceScaleGspmdEngine(DeviceScaleEngine):
+    """The jit-sharded GSPMD path, pinned: ``scale='device-gspmd'`` runs
+    `DeviceScaleEngine` itself even where a 1-D mesh would resolve to the
+    cluster-major shard_map engine.  (Equivalent per-spec escape hatch:
+    ``ShardingSpec.impl='gspmd'``.)"""
+
+
 # `scale` resolves through the same registry mechanism as every other
 # component; a new execution scale is a registration, not a facade edit
 register_engine(DEVICE_SCALE)(DeviceScaleEngine)
+register_engine(GSPMD_DEVICE_SCALE)(DeviceScaleGspmdEngine)
 register_engine(DATACENTER_SCALE)(DatacenterEngine)

@@ -21,13 +21,18 @@ behavior.  A 1-device mesh (``mesh=(1,)``) builds a real `Mesh` and goes
 through the sharded jit path — the placement-parity test pins that this
 too reproduces the unsharded trace bit for bit.
 
-The engine consumes a `Placement` through jit ``in_shardings`` /
-``out_shardings`` on the fused round and the lax.scan-over-rounds: XLA's
-SPMD partitioner then keeps per-shard work local and inserts the
-all-reduces the Eqn-19 global average needs.  (A ``shard_map`` around the
-padded membership gathers would make locality explicit instead of
-inferred; that needs shard-aligned cluster memberships, which k-means
-does not give — see API.md "Placement".)
+Two sharded implementations consume a `Placement`:
+
+* ``impl='gspmd'`` (the PR-5 path): jit ``in_shardings`` /
+  ``out_shardings`` on the fused round and the lax.scan-over-rounds;
+  XLA's SPMD partitioner infers the collectives.  Membership gathers are
+  not shard-aligned under k-means, so the partitioner inserts cross-shard
+  all-gathers — this path measures partitioning overhead, not capacity.
+* ``impl='shard_map'`` (the cluster-major engine,
+  `repro.api.cluster_engine`): the fleet is statically re-indexed so each
+  cluster's member slots are contiguous, every leaf co-shards over one
+  mesh axis (``shard_map_placement`` below), and the round is an explicit
+  `jax.shard_map` whose only collectives are two psums.
 """
 from __future__ import annotations
 
@@ -39,7 +44,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from .spec import ShardingSpec
+from .spec import GSPMD_IMPL, ShardingSpec
 
 # FleetState field -> leaf-group membership (leading-dim semantics)
 DEVICE_GROUP = ("twins", "rep", "channel")
@@ -99,26 +104,49 @@ class Placement:
 SINGLE_DEVICE = Placement()
 
 
-def resolve(sharding: ShardingSpec, *, n_devices: int,
-            n_clusters: int) -> Placement:
-    """`ShardingSpec` -> `Placement` over this process's visible devices.
-
-    Raises with a readable error when the mesh does not divide the fleet
-    (delegated to ``ShardingSpec.validate``) or needs more devices than
-    the backend exposes.
-    """
-    if not sharding.is_sharded:
-        return SINGLE_DEVICE
-    sharding.validate(n_devices, n_clusters)
-    need = math.prod(sharding.mesh)
+def _mesh_devices(mesh_shape) -> np.ndarray:
+    """The device array backing a mesh, or a readable error.  Spans *all*
+    processes under `jax.distributed` (multi-controller SPMD)."""
+    need = math.prod(mesh_shape)
     devices = jax.devices()
     if len(devices) < need:
         raise ValueError(
-            f"sharding: mesh {sharding.mesh} needs {need} devices but the "
-            f"{devices[0].platform} backend exposes {len(devices)}; on a "
-            "CPU host, force a device pool with XLA_FLAGS="
+            f"sharding: mesh {tuple(mesh_shape)} needs {need} devices but "
+            f"the {devices[0].platform} backend exposes {len(devices)}; on "
+            "a CPU host, force a device pool with XLA_FLAGS="
             f"--xla_force_host_platform_device_count={need}")
+    return np.asarray(devices[:need]).reshape(mesh_shape)
+
+
+def resolve(sharding: ShardingSpec, *, n_devices: int, n_clusters: int,
+            impl: Optional[str] = None) -> Placement:
+    """`ShardingSpec` -> `Placement` over this process's visible devices.
+
+    ``impl`` overrides the spec's resolved implementation for validation
+    purposes — the plain `DeviceScaleEngine` passes ``'gspmd'`` so a
+    shard_map-defaulted spec forced onto the fallback path still gets the
+    strict divisibility check that path requires.
+
+    Raises with a readable error when the mesh does not divide the fleet
+    (``impl='gspmd'``; delegated to ``ShardingSpec.validate``) or needs
+    more devices than the backend exposes.
+    """
+    if not sharding.is_sharded:
+        return SINGLE_DEVICE
+    if impl is not None and impl != sharding.resolved_impl():
+        sharding = dataclasses.replace(sharding, impl=impl)
+    sharding.validate(n_devices, n_clusters)
     axes = sharding.resolved_axes()
-    mesh = Mesh(np.asarray(devices[:need]).reshape(sharding.mesh), axes)
+    mesh = Mesh(_mesh_devices(sharding.mesh), axes)
     return Placement(mesh=mesh, device_axis=sharding.device_axis,
                      cluster_axis=sharding.resolved_cluster_axis(axes))
+
+
+def shard_map_placement(sharding: ShardingSpec) -> Placement:
+    """The cluster-major placement: one 1-D mesh axis carrying *both* leaf
+    groups (fleet rows are cluster-major, so device and cluster dims
+    co-shard by construction).  Used by `repro.api.cluster_engine`."""
+    assert sharding.is_sharded and len(sharding.mesh) == 1
+    axes = sharding.resolved_axes()
+    mesh = Mesh(_mesh_devices(sharding.mesh), axes)
+    return Placement(mesh=mesh, device_axis=axes[0], cluster_axis=axes[0])

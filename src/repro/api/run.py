@@ -41,6 +41,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "(needs that many devices; on CPU force a pool "
                          "with XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N)")
+    ap.add_argument("--impl", default=None, choices=["shard_map", "gspmd"],
+                    help="sharded execution implementation for --mesh "
+                         "(default: shard_map on 1-D meshes, gspmd on "
+                         "multi-axis meshes)")
     ap.add_argument("--spec-json", action="store_true",
                     help="print the resolved spec as JSON and exit")
     ap.add_argument("--trace-out", default="",
@@ -72,7 +76,8 @@ def resolve_spec(args) -> FederationSpec:
         except ValueError:
             raise ValueError(f"--mesh {args.mesh!r}: expected a mesh shape "
                              "like '8' or '4x2'") from None
-        spec = spec.replace(sharding=ShardingSpec(mesh=shape))
+        spec = spec.replace(sharding=ShardingSpec(mesh=shape,
+                                                  impl=args.impl))
     return spec.validate()
 
 

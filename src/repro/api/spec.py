@@ -23,6 +23,10 @@ DATACENTER_SCALE = "datacenter"  # sharded fl_step modes over the LM task
 # 2-D meshes put the cluster stack on the leading axis
 _DEFAULT_AXES = {1: ("fleet",), 2: ("cluster", "fleet")}
 
+# sharded execution implementations (`ShardingSpec.impl`)
+SHARD_MAP_IMPL = "shard_map"    # explicit per-shard round, cluster-major
+GSPMD_IMPL = "gspmd"            # jit in/out_shardings, inferred collectives
+
 
 @dataclasses.dataclass
 class ShardingSpec:
@@ -38,21 +42,51 @@ class ShardingSpec:
     cluster-dim group (stacked params / event times); either may be None to
     replicate that group.  Scalars (queue, round, RNG key) and the global
     model are always replicated.
+
+    ``impl`` picks the sharded execution implementation:
+
+      "shard_map"   the cluster-major engine: the fleet is re-indexed so
+                    each cluster's member slots are contiguous, every
+                    FleetState leaf co-shards over one mesh axis, and the
+                    round is an explicit `jax.shard_map` whose only
+                    collectives are one psum for metrics and one for the
+                    Eqn-19 global average.  1-D meshes only.  Arbitrary
+                    (n_devices, n_clusters) run on any shard count — the
+                    engine pads with masked sentinel devices/clusters.
+      "gspmd"       the PR-5 path: leaf-group NamedShardings + jit
+                    in/out_shardings, collectives inferred by the SPMD
+                    partitioner.  Requires exact mesh divisibility.
+      None          (default) "shard_map" for 1-D meshes, "gspmd" for 2-D.
     """
     mesh: Tuple[int, ...] = ()
     axes: Optional[Tuple[str, ...]] = None
     device_axis: Optional[str] = "fleet"
     cluster_axis: Optional[str] = None
+    impl: Optional[str] = None
 
     def __post_init__(self):
         # JSON round-trips deliver lists; normalize so eq/hash behave
         self.mesh = tuple(int(m) for m in self.mesh)
         if self.axes is not None:
             self.axes = tuple(str(a) for a in self.axes)
+        if self.impl is not None:
+            self.impl = str(self.impl)
 
     @property
     def is_sharded(self) -> bool:
         return bool(self.mesh)
+
+    def resolved_impl(self) -> Optional[str]:
+        """The sharded implementation this spec runs on (None: unsharded)."""
+        if not self.mesh:
+            return None
+        if self.impl is not None:
+            if self.impl not in (SHARD_MAP_IMPL, GSPMD_IMPL):
+                raise ValueError(
+                    f"sharding: unknown impl {self.impl!r}; valid: "
+                    f"{SHARD_MAP_IMPL!r}, {GSPMD_IMPL!r}")
+            return self.impl
+        return SHARD_MAP_IMPL if len(self.mesh) == 1 else GSPMD_IMPL
 
     def resolved_axes(self) -> Tuple[str, ...]:
         if self.axes is not None:
@@ -84,6 +118,26 @@ class ShardingSpec:
                 f"axes={axes} names {len(axes)}")
         if len(set(axes)) != len(axes):
             raise ValueError(f"sharding: duplicate axis names in {axes}")
+        impl = self.resolved_impl()
+        if impl == SHARD_MAP_IMPL:
+            # the cluster-major shard_map engine co-shards every leaf over
+            # one axis and pads indivisible fleets with masked sentinel
+            # devices/clusters itself — no divisibility requirement here
+            # (the engine logs the padding it applies)
+            if len(self.mesh) != 1:
+                raise ValueError(
+                    f"sharding: impl='shard_map' runs on 1-D meshes (one "
+                    f"cluster-shard axis); got mesh {self.mesh} — use "
+                    "impl='gspmd' for multi-axis placements")
+            if n_devices < n_clusters:
+                raise ValueError("n_devices < n_clusters")
+            for role, name in (("device_axis", self.device_axis),
+                               ("cluster_axis", self.cluster_axis)):
+                if name is not None and name not in axes:
+                    raise ValueError(
+                        f"sharding: {role}={name!r} is not a mesh axis; "
+                        f"axes={axes}")
+            return self
         cluster_axis = self.resolved_cluster_axis(axes)
         for role, name, dim, total in (
                 ("device_axis", self.device_axis, "n_devices", n_devices),

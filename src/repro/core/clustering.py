@@ -84,13 +84,21 @@ def padded_membership(assign, k: int):
     """
     assign = np.asarray(assign)
     n = assign.shape[0]
-    groups = [np.where(assign == c)[0] for c in range(k)]
-    m = max((len(g) for g in groups), default=0)
-    table = np.full((k, max(m, 1)), n, dtype=np.int32)
-    mask = np.zeros((k, max(m, 1)), dtype=bool)
-    for c, g in enumerate(groups):
-        table[c, :len(g)] = g
-        mask[c, :len(g)] = True
+    # vectorized grouping (the per-cluster np.where loop was O(n*k) —
+    # minutes at the capacity benchmark's n=10^6): one stable sort by
+    # cluster, then each cluster's members are a contiguous run.  Stable
+    # sort keeps ids ascending within a cluster, exactly like np.where.
+    order = np.argsort(assign, kind="stable").astype(np.int32)
+    counts = np.bincount(assign, minlength=k)
+    m = int(counts.max()) if n else 0
+    width = max(m, 1)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    col = np.arange(n) - np.repeat(starts, counts)      # slot within row
+    table = np.full((k, width), n, dtype=np.int32)
+    mask = np.zeros((k, width), dtype=bool)
+    rows = np.repeat(np.arange(k), counts)
+    table[rows, col] = order
+    mask[rows, col] = True
     return jnp.asarray(table), jnp.asarray(mask)
 
 

@@ -32,13 +32,14 @@ def _data(n=512, dim=24, devices=8, seed=0):
     return data, dirichlet_partition(key, data.y, devices)
 
 
-def _scan_spec(seed, mesh=(), **kw):
+def _scan_spec(seed, mesh=(), impl=None, **kw):
     kw.setdefault("controller", ControllerSpec("fixed", {"a": 3}))
     return FederationSpec(
         fleet=FleetSpec(n_devices=8),
         clustering=api.ClusteringSpec(n_clusters=2),
         execution="scanned", rounds=6, sim_seconds=1e9,
-        local_batch=16, seed=seed, sharding=ShardingSpec(mesh=mesh), **kw)
+        local_batch=16, seed=seed,
+        sharding=ShardingSpec(mesh=mesh, impl=impl), **kw)
 
 
 # --------------------------------------------------------------------- #
@@ -70,13 +71,17 @@ def test_sharding_spec_default_is_single_device():
 
 
 def test_sharding_spec_validate_rejects_indivisible_mesh():
+    # divisibility is a gspmd-impl constraint: the shard_map engine pads
+    # indivisible fleets itself (see test_cluster_engine.py)
     with pytest.raises(ValueError, match="does not divide n_devices=16"):
-        FederationSpec(sharding=ShardingSpec(mesh=(3,))).validate()
+        FederationSpec(
+            sharding=ShardingSpec(mesh=(3,), impl="gspmd")).validate()
     with pytest.raises(ValueError, match="does not divide n_clusters=4"):
         FederationSpec(
             fleet=FleetSpec(n_devices=16),
             sharding=ShardingSpec(mesh=(8,), cluster_axis="fleet",
-                                  device_axis=None)).validate()
+                                  device_axis=None,
+                                  impl="gspmd")).validate()
 
 
 def test_sharding_spec_validate_rejects_malformed_meshes():
@@ -90,7 +95,10 @@ def test_sharding_spec_validate_rejects_malformed_meshes():
     with pytest.raises(ValueError, match="no default axis names"):
         ShardingSpec(mesh=(2, 2, 2)).validate(16, 4)
     with pytest.raises(ValueError, match="distinct mesh axes"):
-        ShardingSpec(mesh=(4,), cluster_axis="fleet").validate(16, 4)
+        # gspmd-only: the cluster-major shard_map engine deliberately
+        # co-shards devices and clusters over the one mesh axis
+        ShardingSpec(mesh=(4,), cluster_axis="fleet",
+                     impl="gspmd").validate(16, 4)
     with pytest.raises(ValueError, match="not supported at datacenter"):
         FederationSpec(scale=api.DATACENTER_SCALE, task=api.TaskSpec("lm"),
                        sharding=ShardingSpec(mesh=(1,))).validate()
@@ -105,7 +113,8 @@ def test_cli_mesh_flag_errors_cleanly(capsys):
     """--mesh config errors (indivisible or oversized meshes) print
     `error: ...` and exit 2 — never a traceback."""
     from repro.api import run as cli
-    assert cli.main(["--scenario", "byzantine", "--mesh", "3"]) == 2
+    assert cli.main(["--scenario", "byzantine", "--mesh", "3",
+                     "--impl", "gspmd"]) == 2
     assert "does not divide" in capsys.readouterr().err
     assert cli.main(["--scenario", "byzantine", "--mesh", "64",
                      "--devices", "64"]) == 2
@@ -221,8 +230,9 @@ def test_one_device_mesh_trace_bit_identical():
     data, parts = _data(seed=21)
     plain = Federation.from_spec(_scan_spec(21), data=data,
                                  parts=parts).run()
-    meshed = Federation.from_spec(_scan_spec(21, mesh=(1,)), data=data,
-                                  parts=parts).run()
+    meshed = Federation.from_spec(
+        _scan_spec(21, mesh=(1,), impl="gspmd"), data=data,
+        parts=parts).run()
     assert _record_tuples(plain) == _record_tuples(meshed)
 
 
@@ -236,8 +246,8 @@ def test_one_device_mesh_event_heap_bit_identical():
     plain = Federation.from_spec(spec, data=data, parts=parts).run(
         eval_every=1.0)
     meshed = Federation.from_spec(
-        spec.replace(sharding=ShardingSpec(mesh=(1,))), data=data,
-        parts=parts).run(eval_every=1.0)
+        spec.replace(sharding=ShardingSpec(mesh=(1,), impl="gspmd")),
+        data=data, parts=parts).run(eval_every=1.0)
     assert _record_tuples(plain) == _record_tuples(meshed)
 
 
@@ -269,8 +279,8 @@ def test_sharded_scanned_parity_inprocess():
         "lyapunov", {"budget": 300.0, "horizon": 40}))
     plain = Federation.from_spec(spec, data=data, parts=parts).run()
     shard = Federation.from_spec(
-        spec.replace(sharding=ShardingSpec(mesh=(8,))), data=data,
-        parts=parts).run()
+        spec.replace(sharding=ShardingSpec(mesh=(8,), impl="gspmd")),
+        data=data, parts=parts).run()
     _assert_sharded_parity(plain, shard)
 
 
@@ -301,7 +311,8 @@ ctl = DQNController.pretrain(seed=0, episodes=1, horizon=8)
 mk = lambda: DQNController(ctl.agent, ctl.cfg)
 rows = {}
 for name, s in (("plain", spec),
-                ("shard", spec.replace(sharding=ShardingSpec(mesh=(8,))))):
+                ("shard", spec.replace(
+                    sharding=ShardingSpec(mesh=(8,), impl="gspmd")))):
     tr = Federation.from_spec(s, data=data, parts=parts,
                               controller=mk()).run()
     rows[name] = [[r.t, r.round, r.cluster, r.a, r.loss, r.energy,
