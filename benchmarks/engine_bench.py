@@ -225,6 +225,38 @@ def bench_mode(fused, *, n_devices, n_clusters, rounds, warmup, data,
     return rounds / dt, dt
 
 
+def bench_fused_split(*, n_devices, n_clusters, rounds, data, parts,
+                      local_batch=64, seed=0):
+    """Span-derived compile vs steady-state split of the fused scanned
+    path.  With an `EngineObs` attached, the first ``run_scanned(K)`` is
+    a scan-cache miss, so the engine AOT-compiles under its
+    ``span("compile")``; the second identical call is a cache hit whose
+    fenced ``span("round")`` is pure execution.  Separating the two keeps
+    the perf trajectory honest: a compile-time regression and a
+    steady-state regression are different bugs."""
+    from repro.obs import EngineObs
+    fed = _build(n_devices, n_clusters, seed, True, data, parts,
+                 local_batch)
+    obs = EngineObs()
+    fed.engine.set_obs(obs)
+    fed.engine.run_scanned(rounds, eval_final=False)    # pays the compile
+    fed.engine.run_scanned(rounds, eval_final=False)    # steady state
+    compile_sp = obs.spans.last("compile")
+    steady = obs.spans.last("round")
+    split = {
+        "compile_s": round(compile_sp.dur_s, 4) if compile_sp else None,
+        "steady_segment_s": round(steady.dur_s, 4),
+        "steady_rounds_per_sec": round(rounds / steady.dur_s, 2),
+        "steady_dispatch_s": round(steady.attrs["dispatch_s"], 4)
+        if "dispatch_s" in steady.attrs else None,
+    }
+    hlo_flops = obs.m_hlo_flops.total()
+    if hlo_flops:
+        split["hlo_flops"] = hlo_flops
+        split["hlo_collective_ops"] = obs.m_hlo_coll.total()
+    return split
+
+
 def bench_legacy(*, n_devices, n_clusters, rounds, warmup, data, parts,
                  local_batch=64, seed=0):
     from repro.api.components import FixedController, MLPTask
@@ -616,6 +648,13 @@ def main(argv=None):
     print(f"engine,fused_vs_legacy_speedup,{speedup:.2f}x "
           f"(n_devices={args.devices}, {args.rounds} rounds)")
     print(f"engine,fused_vs_reference_speedup,{fused_rps / ref_rps:.2f}x")
+    split = bench_fused_split(
+        n_devices=args.devices, n_clusters=args.clusters,
+        rounds=args.rounds, data=data, parts=parts,
+        local_batch=args.local_batch)
+    print(f"engine,scan_compile_s,{split['compile_s']}")
+    print(f"engine,scan_steady_rounds_per_sec,"
+          f"{split['steady_rounds_per_sec']}")
 
     if not args.fast:
         payload = {
@@ -640,6 +679,10 @@ def main(argv=None):
             "fused_rounds_per_sec": round(fused_rps, 2),
             "speedup_vs_legacy": round(speedup, 2),
             "speedup_vs_reference": round(fused_rps / ref_rps, 2),
+            # span-derived split (repro.obs): scan-path compile time vs
+            # steady-state execution, so the trajectory separates
+            # compilation regressions from execution regressions
+            "scan_span_split": split,
         }
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)

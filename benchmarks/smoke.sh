@@ -44,6 +44,25 @@ python -m repro.serve resume --run-dir "$SERVE_DIR" \
 python -m repro.serve status --run-dir "$SERVE_DIR" --tail 1 \
     | python -c "import json,sys; s=json.load(sys.stdin)['state']; \
 print('serve:', s['status'], 'rounds', s['rounds'], 'acc', s['last_acc'])"
+
+echo "== telemetry (serve metrics + status --watch --once) =="
+python -m repro.serve metrics --run-dir "$SERVE_DIR" > /tmp/serve_metrics.prom
+grep -E -m 6 "^(fl_|service_)" /tmp/serve_metrics.prom
+python -c "
+import sys
+text = open('/tmp/serve_metrics.prom').read()
+for name in ('fl_rounds_total', 'service_segments_total',
+             'fl_checkpoints_total'):
+    line = next((l for l in text.splitlines()
+                 if l.startswith(name)), None)
+    assert line is not None, f'{name} missing from serve metrics'
+    assert float(line.split()[-1]) > 0, f'{name} is zero: {line}'
+print('telemetry: counters non-empty OK')
+"
+python -m repro.serve status --run-dir "$SERVE_DIR" --watch --once \
+    > /tmp/serve_watch.txt
+head -n 12 /tmp/serve_watch.txt
+cp "$SERVE_DIR/metrics.jsonl" /tmp/serve_metrics.jsonl   # CI artifact
 rm -rf "$SERVE_DIR"
 
 echo "== chaos harness (SIGKILL mid-segment, supervised recovery) =="

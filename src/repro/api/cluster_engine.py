@@ -703,13 +703,23 @@ class ClusterMajorEngine(DeviceScaleEngine):
                 "scan_policy(); use the event-heap run() instead")
         pol = scan_policy()
         K = int(K)
+        args = (self.state, self._scan_times, pol.state,
+                self._scan_energy_start(), self._ftbl, self._ch3,
+                *self._statics)
         fn = self._scan_cache.get(K)
         if fn is None:
-            fn = self._scan_cache[K] = self._build_scan_fn(K, pol)
-        (state, times, _, energy_end, ftbl, ch3), ys = fn(
-            self.state, self._scan_times, pol.state,
-            self._scan_energy_start(), self._ftbl, self._ch3,
-            *self._statics)
+            fn = self._instrument_compile(
+                f"cm_run_scanned[K={K}]", self._build_scan_fn(K, pol),
+                args)
+            self._scan_cache[K] = fn
+        if self.obs is None:
+            out = fn(*args)
+        else:
+            with self.obs.span("round", mode="scanned", rounds=K) as sp:
+                out = fn(*args)
+                sp.mark("dispatch")
+                jax.block_until_ready(out)
+        (state, times, _, energy_end, ftbl, ch3), ys = out
         self.state = state
         self._scan_times = times
         self._ftbl, self._ch3 = ftbl, ch3
@@ -753,6 +763,28 @@ class ClusterMajorEngine(DeviceScaleEngine):
         sync_queue = getattr(self.controller, "sync_queue", None)
         if sync_queue is not None:
             sync_queue(self.state.queue)
+
+    def obs_state_summary(self) -> dict:
+        """Telemetry state summary, masked to real device slots: sentinel
+        slots (cluster-major padding) carry the `_TWIN_FILLS` values and
+        would skew the reputation stats if reduced over naively."""
+        if self._obs_summary_fn is None:
+            def summarize(state, valid):
+                rep = state.rep
+                v = valid.astype(jnp.float32)
+                nv = jnp.sum(v)
+                return {
+                    "queue_deficit": state.queue,
+                    "reputation_min": jnp.min(
+                        jnp.where(valid, rep, jnp.inf)),
+                    "reputation_mean": jnp.sum(rep * v) / nv,
+                    "reputation_max": jnp.max(
+                        jnp.where(valid, rep, -jnp.inf)),
+                    "twin_beta_sum": jnp.sum(state.twins.beta * v)}
+            self._obs_summary_fn = jax.jit(summarize)
+        out = jax.device_get(self._obs_summary_fn(
+            self.state, self._statics[2]))
+        return {k: float(v) for k, v in out.items()}
 
     @property
     def scan_times(self):

@@ -82,6 +82,7 @@ the same controller protocol and emits the same `RoundRecord` trace.
 """
 from __future__ import annotations
 
+import contextlib
 import heapq
 from typing import (Any, NamedTuple, Optional, Protocol, runtime_checkable)
 
@@ -316,6 +317,14 @@ class DeviceScaleEngine:
         # this at a JSONL file); None = the in-memory batch default
         self.trace_sink = None
         self.trace_retain = True
+        # optional telemetry bundle (`repro.obs.EngineObs`): metrics
+        # registry + span recorder.  Attached via `set_obs`; everything it
+        # feeds on either already crosses the host boundary (the stacked
+        # per-segment metrics, the event loop's per-round dict) or is a
+        # separate read-only jitted reduction — never a change to the
+        # round program, so traces stay bit-identical with it attached
+        self.obs = None
+        self._obs_summary_fn = None
         # control plane: jitted host ctx features / observation builders
         # + compiled scan paths
         self._features_fn = jax.jit(self._ctl_features)
@@ -359,6 +368,61 @@ class DeviceScaleEngine:
 
     def _new_trace(self) -> FLTrace:
         return FLTrace(sink=self.trace_sink, retain=self.trace_retain)
+
+    # telemetry (`repro.obs` — see API.md "Observability") -------------- #
+    def set_obs(self, obs) -> None:
+        """Attach an `repro.obs.EngineObs` telemetry bundle (``None``
+        detaches).  The engine publishes per-segment round aggregates,
+        state summaries, compile events, and fault tallies into it.
+        Attaching telemetry never alters the compiled round program —
+        emitted traces stay bit-identical to an uninstrumented run
+        (pinned by tests/test_obs.py)."""
+        self.obs = obs
+        if obs is not None:
+            obs.publish_static(self)
+
+    def _obs_span(self, name: str, fence_on=None, **attrs):
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.span(name, fence_on=fence_on, **attrs)
+
+    def _instrument_compile(self, name: str, fn, args):
+        """Compile ``fn`` for ``args`` under telemetry.
+
+        With no obs attached, returns ``fn`` unchanged (the plain jit
+        path — compilation happens implicitly on first call, exactly as
+        before).  Under telemetry, lower+compile explicitly (AOT builds
+        the *same* executable the first jit call would) inside a
+        ``span("compile")``, and feed the optimized HLO through
+        `hlo_stats.analyze_module` for the one-time compile event."""
+        if self.obs is None:
+            return fn
+        with self.obs.span("compile", fn=name) as sp:
+            compiled = fn.lower(*args).compile()
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = None
+        self.obs.record_compile(name, sp.dur_s, hlo)
+        return compiled
+
+    def obs_state_summary(self) -> dict:
+        """Host scalars for the telemetry gauges: Eqn-12 deficit-queue
+        level, Eqn-4 trust-weight (reputation) summary stats, and the
+        fleet's total β (negative-interaction) tally.  One read-only
+        jitted reduction over `FleetState` — never part of the round
+        program, so sampling it cannot perturb compiled math."""
+        if self._obs_summary_fn is None:
+            def summarize(state):
+                rep = state.rep
+                return {"queue_deficit": state.queue,
+                        "reputation_min": rep.min(),
+                        "reputation_mean": rep.mean(),
+                        "reputation_max": rep.max(),
+                        "twin_beta_sum": state.twins.beta.sum()}
+            self._obs_summary_fn = jax.jit(summarize)
+        out = jax.device_get(self._obs_summary_fn(self.state))
+        return {k: float(v) for k, v in out.items()}
 
     @property
     def scan_times(self) -> jnp.ndarray:
@@ -741,12 +805,23 @@ class DeviceScaleEngine:
                 "scan_policy(); use the event-heap run() instead")
         pol = scan_policy()
         K = int(K)
+        args = (self.state, self._scan_times, pol.state,
+                self._scan_energy_start())
         fn = self._scan_cache.get(K)
         if fn is None:
-            fn = self._scan_cache[K] = self._build_scan_fn(K, pol)
-        (state, times, _, energy_end), ys = fn(
-            self.state, self._scan_times, pol.state,
-            self._scan_energy_start())
+            fn = self._instrument_compile(
+                f"run_scanned[K={K}]", self._build_scan_fn(K, pol), args)
+            self._scan_cache[K] = fn
+        if self.obs is None:
+            out = fn(*args)
+        else:
+            # fenced round span: `mark` stamps the async-dispatch time,
+            # the fence charges the span for the device compute it queued
+            with self.obs.span("round", mode="scanned", rounds=K) as sp:
+                out = fn(*args)
+                sp.mark("dispatch")
+                jax.block_until_ready(out)
+        (state, times, _, energy_end), ys = out
         self.state = state
         self._scan_times = times        # schedule carries to the next call
         return self._emit_scanned_trace(ys, K, eval_final, energy_end)
@@ -793,10 +868,15 @@ class DeviceScaleEngine:
             self._energy_dev = energy_end
             if sync_queue is not None:
                 sync_queue(self.state.queue)
+            if self.obs is not None:
+                # deferred path: keep the round counter honest, but do
+                # not force the per-segment sync the path exists to avoid
+                self.obs.m_rounds.inc(K)
             return self._new_trace()
 
         self._flush_pending()
-        ys = jax.device_get(ys)             # the one end-of-run sync
+        with self._obs_span("host_sync", rounds=K):
+            ys = jax.device_get(ys)         # the one end-of-run sync
         # rebuild the float64 tally by the same sequential additions the
         # event loop performs (bitwise-identical cumulative energies)
         cum = []
@@ -805,6 +885,8 @@ class DeviceScaleEngine:
             cum.append(self._energy_used)
         if sync_queue is not None:          # host controller adopts the
             sync_queue(self.state.queue)    # device-resident backlog
+        if self.obs is not None:
+            self.obs.on_segment(ys, K, engine=self)
 
         trace = self._new_trace()
         for i in range(K):
@@ -814,7 +896,11 @@ class DeviceScaleEngine:
                 loss=float(ys["loss"][i]), acc=None, energy=cum[i],
                 agg_count=base + i + 1))
         if eval_final:
-            ev = self.task.evaluate(self.state.global_params, self.data)
+            with self._obs_span("eval"):
+                ev = self.task.evaluate(self.state.global_params,
+                                        self.data)
+            if self.obs is not None:
+                self.obs.on_eval(ev["loss"], ev.get("acc"))
             trace.append(RoundRecord(
                 t=float(ys["t"][-1]) + float(ys["dur"][-1]),
                 round=self._rounds, cluster=int(ys["cluster"][-1]),
@@ -852,9 +938,18 @@ class DeviceScaleEngine:
             self._energy_used += float(m["consumed"])
             self.controller.observe(None, float(m["consumed"]),
                                     float(m["loss"]))
+            if self.obs is not None:
+                self.obs.on_round(
+                    cluster=c, a=int(m["a"]), dur=float(m["dur"]),
+                    consumed=float(m["consumed"]), loss=float(m["loss"]),
+                    engine=self)
             heapq.heappush(events, (t + float(m["dur"]), c))
             if t >= next_eval:
-                ev = self.task.evaluate(self.state.global_params, self.data)
+                with self._obs_span("eval"):
+                    ev = self.task.evaluate(self.state.global_params,
+                                            self.data)
+                if self.obs is not None:
+                    self.obs.on_eval(ev["loss"], ev.get("acc"))
                 trace.append(RoundRecord(
                     t=t, round=self._rounds, cluster=c, a=int(m["a"]),
                     loss=ev["loss"], acc=ev.get("acc"),

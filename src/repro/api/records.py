@@ -41,27 +41,46 @@ class RoundRecord:
 
 
 class JsonlSink:
-    """Append-only JSONL writer: one `RoundRecord` dict per line.
+    """Append-only JSONL writer: one record dict per line.
 
-    The file handle stays open across appends (a segment flushes K records
-    in a burst) and every line is flushed immediately, so an external
-    ``tail -f`` — or the service ``status`` command — sees records as they
-    land.  Appending to an existing file continues it, which is exactly
-    what a resumed run wants.
+    Accepts dataclass records (`RoundRecord`) or plain dicts (the
+    ``metrics.jsonl`` span/snapshot/event records).  The file handle
+    stays open across appends (a segment flushes K records in a burst)
+    and every line is flushed immediately, so an external ``tail -f`` —
+    or the service ``status`` command — sees records as they land.
+    Appending to an existing file continues it, which is exactly what a
+    resumed run wants.  Every append stat-checks the path against the
+    open handle's inode and re-opens if the file was rotated or unlinked
+    underneath it, so log rotation of a long-serving run can't silently
+    drop records into an orphaned handle.
     """
 
     def __init__(self, path: str):
         self.path = str(path)
         self._f = None
 
-    def append(self, rec: RoundRecord) -> None:
-        if self._f is None:
-            parent = os.path.dirname(self.path)
-            if parent:
-                os.makedirs(parent, exist_ok=True)
-            self._f = open(self.path, "a")
-        self._f.write(json.dumps(dataclasses.asdict(rec),
-                                 separators=(",", ":")) + "\n")
+    def _ensure_open(self) -> None:
+        if self._f is not None:
+            # rotation check: same inode+device still at our path?
+            try:
+                st = os.stat(self.path)
+                fst = os.fstat(self._f.fileno())
+                if (st.st_ino, st.st_dev) == (fst.st_ino, fst.st_dev):
+                    return
+            except OSError:
+                pass                    # unlinked / renamed away
+            self._f.close()
+            self._f = None
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(self.path, "a")
+
+    def append(self, rec) -> None:
+        if dataclasses.is_dataclass(rec):
+            rec = dataclasses.asdict(rec)
+        self._ensure_open()
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
         self._f.flush()
 
     def close(self) -> None:
@@ -137,13 +156,29 @@ class FLTrace:
 # JSONL trace files (the streamed form)
 # --------------------------------------------------------------------- #
 def read_jsonl_trace(path: str) -> FLTrace:
-    """Load a streamed trace file back into an in-memory `FLTrace`."""
+    """Load a streamed trace file back into an in-memory `FLTrace`.
+
+    A torn **final** line — the signature of a writer killed
+    mid-`JsonlSink.append` (the chaos harness produces these on every
+    SIGKILL) — is skipped, so status/resume on a crashed run dir works.
+    An unparseable line *followed by* further records is real corruption
+    and still raises.
+    """
     trace = FLTrace()
+    torn: Optional[json.JSONDecodeError] = None
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
-                trace.append(RoundRecord.from_dict(json.loads(line)))
+            if not line:
+                continue
+            if torn is not None:        # bad line was not the last one
+                raise torn
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                torn = e
+                continue
+            trace.append(RoundRecord.from_dict(rec))
     return trace
 
 

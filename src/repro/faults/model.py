@@ -66,6 +66,25 @@ class FaultModel:
         self._seed = int(spec.seed)
 
     # convenience mirrors ---------------------------------------------- #
+    def stats(self) -> dict:
+        """Static bookkeeping for telemetry gauges (`repro.obs`): the
+        realized Byzantine subset sizes plus the per-family rates.  All
+        build-time constants — realized *in-jit* draws are deliberately
+        not counted, since surfacing them would require new scan outputs
+        and break the instrumented/uninstrumented trace bit-parity the
+        telemetry layer guarantees."""
+        s = self.spec
+        return {
+            "active": float(self.active),
+            "corrupt_devices": float(np.sum(np.asarray(self.corrupt_dev))),
+            "poison_devices": float(np.sum(np.asarray(self.poison_dev))),
+            "dropout_rate": float(s.dropout) if self.may_drop else 0.0,
+            "straggler_frac": (float(s.straggler_frac)
+                               if self.may_straggle else 0.0),
+            "twin_spike_prob": (float(s.twin_spike_prob)
+                                if self.may_spike else 0.0),
+        }
+
     @property
     def active(self) -> bool:
         return self.spec.active

@@ -4,22 +4,26 @@ The batch API (`repro.api.Federation.run`) answers "run this experiment";
 this package answers "keep this federation running": segments of
 `run_scanned(K)` rounds, a full resumable checkpoint after each, a
 streamed JSONL trace, and a file-protocol CLI (``python -m repro.serve``)
-with start / status / checkpoint / resume / stop / chaos.  Resume is
-bit-exact — a stopped-and-resumed run continues the precise trace an
-uninterrupted run would have produced, even across a SIGKILL: manifests
-carry a CRC32 content digest, restore falls back to the newest *verified*
-checkpoint, and the chaos harness (`chaos.run_supervised`) exercises the
-whole kill → verify → resume path under supervision (API.md "Service
-mode" / "Fault injection & recovery").
+with start / status / metrics / checkpoint / resume / stop / chaos.
+Resume is bit-exact — a stopped-and-resumed run continues the precise
+trace an uninterrupted run would have produced, even across a SIGKILL:
+manifests carry a CRC32 content digest, restore falls back to the newest
+*verified* checkpoint, and the chaos harness (`chaos.run_supervised`)
+exercises the whole kill → verify → resume path under supervision
+(API.md "Service mode" / "Fault injection & recovery").  Telemetry
+(`repro.obs`) streams into ``metrics.jsonl`` beside the trace:
+``status --watch`` renders the live dashboard and ``metrics`` dumps the
+Prometheus snapshot (API.md "Observability").
 """
 from .chaos import run_supervised, spawn_service
 from .runner import (SegmentRunner, latest_resumable, list_resumable,
                      prune_checkpoints, restore_resumable, save_resumable,
                      truncate_jsonl_trace, verify_checkpoint)
-from .service import RunDir, run_service, service_status
+from .service import (RunDir, last_spans, load_run_metrics, run_service,
+                      service_status)
 
 __all__ = ["SegmentRunner", "latest_resumable", "list_resumable",
            "prune_checkpoints", "restore_resumable", "save_resumable",
            "truncate_jsonl_trace", "verify_checkpoint", "RunDir",
            "run_service", "service_status", "run_supervised",
-           "spawn_service"]
+           "spawn_service", "load_run_metrics", "last_spans"]

@@ -109,6 +109,18 @@ def build_parser() -> argparse.ArgumentParser:
     p = common(sub.add_parser("status", help="print service status JSON"))
     p.add_argument("--tail", type=int, default=5,
                    help="trace records to include")
+    p.add_argument("--watch", action="store_true",
+                   help="render a refreshing terminal dashboard instead "
+                        "of JSON")
+    p.add_argument("--interval", type=float, default=2.0,
+                   help="dashboard refresh period in seconds")
+    p.add_argument("--once", action="store_true",
+                   help="with --watch: render a single frame and exit "
+                        "(CI / piping)")
+
+    common(sub.add_parser(
+        "metrics", help="dump the run dir's last metrics snapshot in "
+                        "Prometheus text-exposition format"))
 
     p = common(sub.add_parser(
         "checkpoint", help="request/locate a checkpoint"))
@@ -242,8 +254,34 @@ def cmd_resume(args) -> int:
 
 
 def cmd_status(args) -> int:
-    print(json.dumps(service_status(args.run_dir, tail=args.tail),
-                     indent=2))
+    if not getattr(args, "watch", False):
+        print(json.dumps(service_status(args.run_dir, tail=args.tail),
+                         indent=2))
+        return 0
+    from .dashboard import render
+    try:
+        while True:
+            frame = render(service_status(args.run_dir, tail=args.tail))
+            if args.once:
+                print(frame)
+                return 0
+            # repaint in place: clear screen + home, then the frame
+            sys.stdout.write("\x1b[2J\x1b[H" + frame + "\n")
+            sys.stdout.flush()
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+
+
+def cmd_metrics(args) -> int:
+    from repro.obs import MetricsRegistry
+    from .service import load_run_metrics
+    snap = load_run_metrics(args.run_dir)
+    if snap is None:
+        print(f"error: no metrics snapshots under {args.run_dir} "
+              "(has the service completed a segment?)", file=sys.stderr)
+        return 1
+    sys.stdout.write(MetricsRegistry.from_snapshot(snap).to_prometheus())
     return 0
 
 
@@ -329,7 +367,8 @@ def cmd_chaos(args) -> int:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     return {"start": cmd_start, "resume": cmd_resume,
-            "status": cmd_status, "checkpoint": cmd_checkpoint,
+            "status": cmd_status, "metrics": cmd_metrics,
+            "checkpoint": cmd_checkpoint,
             "stop": cmd_stop, "chaos": cmd_chaos}[args.cmd](args)
 
 

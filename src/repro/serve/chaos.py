@@ -33,8 +33,11 @@ import sys
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.api.records import JsonlSink
+from repro.obs import MetricsRegistry, snapshot_record
+
 from .runner import latest_resumable
-from .service import LOG_FILE, RunDir
+from .service import LOG_FILE, METRICS_FILE, RunDir
 
 
 def segments_done(ckpt_dir: str) -> int:
@@ -99,6 +102,22 @@ def run_supervised(run_dir: str, *, total_segments: int,
     stalls = 0                          # consecutive restarts w/o progress
     backoff = backoff0
     events: List[Dict[str, Any]] = []
+    # supervisor-side telemetry: restart/kill counters snapshot into the
+    # run dir's metrics.jsonl under source="chaos" — the child's
+    # source="service" snapshots merge with these at read time
+    # (`load_run_metrics`), so one file tells the whole recovery story
+    reg = MetricsRegistry()
+    m_kills = reg.counter("chaos_sigkills_total",
+                          "SIGKILLs injected by the chaos harness")
+    m_restarts = reg.counter("chaos_restarts_total",
+                             "service children restarted")
+    m_segments = reg.gauge("chaos_segments",
+                           "verified checkpoint frontier")
+    msink = JsonlSink(rd.path(METRICS_FILE))
+
+    def snap() -> None:
+        m_segments.set(segments_done(rd.ckpt_dir))
+        msink.append(snapshot_record(reg, source="chaos", ts=time.time()))
     while segments_done(rd.ckpt_dir) < total_segments:
         done = segments_done(rd.ckpt_dir)
         proc = spawn_service(
@@ -115,6 +134,8 @@ def run_supervised(run_dir: str, *, total_segments: int,
                 os.kill(proc.pid, signal.SIGKILL)
                 proc.wait()
                 kills_left -= 1
+                m_kills.inc(1)
+                snap()
                 events.append({"event": "sigkill", "pid": proc.pid,
                                "after_segment":
                                    segments_done(rd.ckpt_dir)})
@@ -137,10 +158,13 @@ def run_supervised(run_dir: str, *, total_segments: int,
         # restart whatever the exit code: a clean exit with segments still
         # owed (stop request raced the count) resumes just like a crash
         restarts += 1
+        m_restarts.inc(1)
+        snap()
         events.append({"event": "restart", "backoff": backoff,
                        "exit": proc.returncode})
         time.sleep(backoff)
         backoff = min(backoff * 2.0, backoff_cap)
+    snap()                              # final frontier + counter state
     found = latest_resumable(rd.ckpt_dir)
     return {
         "run_dir": run_dir,

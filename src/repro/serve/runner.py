@@ -236,13 +236,17 @@ class SegmentRunner:
 
     def __init__(self, federation, ckpt_dir: str, *,
                  segment_rounds: int = 25, keep: Optional[int] = 3,
-                 eval_final: bool = True):
+                 eval_final: bool = True, obs=None):
         self.federation = federation
         self.ckpt_dir = str(ckpt_dir)
         self.segment_rounds = int(segment_rounds)
         self.keep = keep
         self.eval_final = eval_final
         self.segment = 0
+        # optional `repro.obs.EngineObs`: wraps the segment/checkpoint in
+        # timing spans and feeds the checkpoint-latency metrics; the
+        # engine-side hooks attach separately via `engine.set_obs`
+        self.obs = obs
 
     # ------------------------------------------------------------------ #
     def maybe_resume(self) -> Optional[Dict[str, Any]]:
@@ -255,16 +259,41 @@ class SegmentRunner:
         return manifest
 
     def run_segment(self):
-        """One K-round scanned segment followed by a checkpoint."""
-        trace = self.federation.engine.run_scanned(
-            self.segment_rounds, eval_final=self.eval_final)
-        self.segment += 1
-        self.checkpoint()
+        """One K-round scanned segment followed by a checkpoint.
+
+        Under telemetry the whole thing nests in a ``span("segment")``
+        whose children are the engine's fenced round/host_sync/eval spans
+        and the ``span("checkpoint")`` below — one emitted timing tree
+        per segment in ``metrics.jsonl``."""
+        if self.obs is None:
+            trace = self.federation.engine.run_scanned(
+                self.segment_rounds, eval_final=self.eval_final)
+            self.segment += 1
+            self.checkpoint()
+            return trace
+        with self.obs.span("segment", segment=self.segment + 1,
+                           rounds=self.segment_rounds):
+            trace = self.federation.engine.run_scanned(
+                self.segment_rounds, eval_final=self.eval_final)
+            self.segment += 1
+            self.checkpoint()
+        self.obs.registry.counter(
+            "service_segments_total", "segments completed").inc(1)
         return trace
 
     def checkpoint(self) -> str:
-        return save_resumable(self.federation, self.ckpt_dir,
-                              segment=self.segment, keep=self.keep)
+        if self.obs is None:
+            return save_resumable(self.federation, self.ckpt_dir,
+                                  segment=self.segment, keep=self.keep)
+        with self.obs.span("checkpoint", segment=self.segment) as sp:
+            path = save_resumable(self.federation, self.ckpt_dir,
+                                  segment=self.segment, keep=self.keep)
+            try:
+                sp.attrs["bytes"] = os.path.getsize(path)
+            except OSError:
+                pass
+        self.obs.on_checkpoint(sp.dur_s, sp.attrs.get("bytes", 0))
+        return path
 
     # ------------------------------------------------------------------ #
     @property

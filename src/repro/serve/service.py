@@ -35,6 +35,7 @@ from typing import Any, Dict, Optional
 
 from repro.api import Federation, FederationSpec
 from repro.api.records import JsonlSink, tail_jsonl
+from repro.obs import (SPAN_SCHEMA, EngineObs, merge_snapshot_records)
 
 from .runner import (SegmentRunner, latest_resumable,
                      truncate_jsonl_trace)
@@ -44,6 +45,7 @@ STATE_FILE = "serve.json"
 PID_FILE = "serve.pid"
 LOG_FILE = "serve.log"
 TRACE_FILE = "trace.jsonl"
+METRICS_FILE = "metrics.jsonl"
 CONTROL_DIR = "control"
 CKPT_DIR = "checkpoints"
 STOP_REQ = "stop.req"
@@ -96,6 +98,10 @@ class RunDir:
     @property
     def trace_path(self):
         return self.path(TRACE_FILE)
+
+    @property
+    def metrics_path(self):
+        return self.path(METRICS_FILE)
 
     @property
     def ckpt_dir(self):
@@ -214,6 +220,15 @@ def run_service(run_dir: str, *, segment_rounds: int = 25,
         sink = JsonlSink(rd.trace_path)
         fed.engine.set_trace_sink(sink, retain=False)
 
+        # telemetry: spans + registry snapshots stream into metrics.jsonl
+        # beside the trace; the engine publishes through the same bundle
+        obs = EngineObs(sink=JsonlSink(rd.metrics_path), source="service")
+        fed.engine.set_obs(obs)
+        runner.obs = obs
+        if resume:
+            obs.registry.counter(
+                "service_resumes_total", "checkpointed resumes").inc(1)
+
         def publish(status: str, **extra) -> Dict[str, Any]:
             last = (tail_jsonl(rd.trace_path, n=1) or [None])[-1]
             return rd.write_state(
@@ -236,10 +251,15 @@ def run_service(run_dir: str, *, segment_rounds: int = 25,
             runner.run_segment()        # K rounds + checkpoint
             rd.take_request(CKPT_REQ)   # just checkpointed: consume
             dt = time.monotonic() - seg_t0
-            publish("running",
-                    rounds_per_sec=round(segment_rounds / max(dt, 1e-9), 3))
+            rps = round(segment_rounds / max(dt, 1e-9), 3)
+            obs.registry.gauge(
+                "service_rounds_per_sec",
+                "wall-clock throughput of the last segment").set(rps)
+            obs.flush_snapshot()        # one metrics.jsonl record/segment
+            publish("running", rounds_per_sec=rps)
             log(f"segment {runner.segment}: round {runner.rounds}, "
                 f"energy {runner.energy:.1f} J, {dt:.2f}s")
+        obs.flush_snapshot()            # farewell snapshot
         state = publish("stopped",
                         wall_seconds=round(time.monotonic() - t0, 3))
         log(f"stopped after {runner.segment} segments "
@@ -258,14 +278,43 @@ def run_service(run_dir: str, *, segment_rounds: int = 25,
 # --------------------------------------------------------------------- #
 # status (read-only, works with or without a live process)
 # --------------------------------------------------------------------- #
+def load_run_metrics(run_dir: str, *, tail: int = 512
+                     ) -> Optional[Dict[str, Any]]:
+    """Merged last metrics snapshot of a run dir's ``metrics.jsonl``.
+
+    Reads only the file's tail, folds the latest snapshot record of each
+    source (service / chaos) into one family dict — the input both the
+    Prometheus dump (`MetricsRegistry.from_snapshot`) and the dashboard
+    consume.  None when the run has no metrics yet."""
+    rd = RunDir(run_dir)
+    return merge_snapshot_records(tail_jsonl(rd.metrics_path, n=tail))
+
+
+def last_spans(run_dir: str, *, n: int = 2, tail: int = 256) -> list:
+    """The last ``n`` span-tree records (schema ``span/1``) of a run
+    dir's ``metrics.jsonl`` — typically the most recent segment trees."""
+    rd = RunDir(run_dir)
+    spans = [r for r in tail_jsonl(rd.metrics_path, n=tail)
+             if r.get("schema") == SPAN_SCHEMA]
+    return spans[-n:]
+
+
 def service_status(run_dir: str, tail: int = 5) -> Dict[str, Any]:
-    """Status snapshot: serve.json + liveness + trace tail + checkpoints."""
+    """Status snapshot: serve.json + liveness + trace tail + checkpoints
+    + the telemetry summary (metric totals and the last segment's span
+    tree, both read off ``metrics.jsonl`` — no live process needed)."""
     rd = RunDir(run_dir)
     state = rd.read_state() or {}
     pid = rd.running_pid()
     if pid is None and state.get("status") == "running":
         state["status"] = "dead"        # crashed without a farewell write
     latest = latest_resumable(rd.ckpt_dir)
+    snap = load_run_metrics(run_dir)
+    metrics: Optional[Dict[str, Any]] = None
+    if snap is not None:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry.from_snapshot(snap).totals()
+    spans = last_spans(run_dir, n=1)
     return {
         "run_dir": rd.root,
         "alive": pid is not None,
@@ -274,4 +323,6 @@ def service_status(run_dir: str, tail: int = 5) -> Dict[str, Any]:
         "last_records": tail_jsonl(rd.trace_path, n=tail),
         "latest_checkpoint": latest[0] if latest else None,
         "checkpoint_manifest": latest[1] if latest else None,
+        "metrics": metrics,
+        "last_span": spans[-1] if spans else None,
     }
