@@ -74,6 +74,24 @@ print('chaos:', s['segments'], 'segments,', s['rounds'], 'rounds,', \
 s['kills'], 'kills,', s['restarts'], 'restarts')"
 rm -rf "$CHAOS_DIR"
 
+echo "== population engine (vmapped federation fleets, B=1..16 fast) =="
+python benchmarks/population_bench.py --fast \
+    --out=/tmp/bench_population.json | tail -n 5
+
+echo "== pool supervisor (multi-tenant serve: start -> resume -> status) =="
+POOL_DIR=$(mktemp -d /tmp/serve_pool.XXXXXX)
+python -m repro.serve pool start --run-dir "$POOL_DIR" \
+    --scenario autoencoder-anomaly --replicates 2 --segment-rounds 4 \
+    --max-segments 1 --foreground
+python -m repro.serve pool resume --run-dir "$POOL_DIR" \
+    --segment-rounds 4 --max-segments 1 --foreground
+python -m repro.serve pool status --run-dir "$POOL_DIR" \
+    | python -c "import json,sys; s=json.load(sys.stdin); \
+assert [m['checkpoint_step'] for m in s['members']] == [8, 8], s; \
+print('pool:', s['state']['status'], 'rounds', s['state']['rounds'], \
+'members', s['state']['members'])"
+rm -rf "$POOL_DIR"
+
 echo "== robustness grid (fault mode x aggregator, fast) =="
 python benchmarks/attack_bench.py --fast --out=/tmp/bench_robustness.json \
     | tail -n 8

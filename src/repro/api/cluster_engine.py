@@ -352,7 +352,7 @@ class ClusterMajorEngine(DeviceScaleEngine):
             members = self._member_table[c]
             mask = self._member_mask[c]
             if fm.may_drop:
-                mask = fm.drop_mask(kflt, mask)
+                mask = fm.drop_mask(kflt, mask, members)
                 members = jnp.where(mask, members, self._sentinel)
             mask_f = mask.astype(jnp.float32)
             cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
@@ -386,7 +386,7 @@ class ClusterMajorEngine(DeviceScaleEngine):
                 tslice(getattr(state.twins, f), getattr(_TWIN_FILLS, f),
                        mask) for f in TwinState._fields])
             if fm.may_spike:
-                tw_m = fm.spike_twins(kflt, tw_m, mask)
+                tw_m = fm.spike_twins(kflt, tw_m, mask, members)
             b = belief(tw_m, q, spec.channel.pkt_fail, div)
             rep_m = update_reputation(
                 tslice(state.rep, 1.0, mask), b,
@@ -406,11 +406,12 @@ class ClusterMajorEngine(DeviceScaleEngine):
                                1.0, mask)
             ch_m = tslice(state.channel, 0, mask)
             e = round_energy(a.astype(jnp.float32), true_freq, ch_m,
-                             ke) * mask_f
+                             ke, members=members) * mask_f
             # the straggle *factor* (straggle() multiplies its dur arg, so
             # dur=1 extracts it); applied post-psum as dur * factor — the
             # exact product the parent computes
-            stretch = (fm.straggle(kflt, jnp.float32(1.0), mask)
+            stretch = (fm.straggle(kflt, jnp.float32(1.0), mask,
+                                    members)
                        if fm.may_straggle else jnp.float32(1.0))
             empty = ((jnp.sum(mask_f) < 0.5).astype(jnp.float32)
                      if fm.may_drop else jnp.float32(0.0))

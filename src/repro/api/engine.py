@@ -495,7 +495,7 @@ class DeviceScaleEngine:
             # sentinel, so every downstream gather fills neutrally and
             # every scatter (reputation, twin observe) drops them — the
             # round treats a dropped device exactly like a padding slot
-            mask = fm.drop_mask(kflt, mask)
+            mask = fm.drop_mask(kflt, mask, members)
             members = jnp.where(mask, members, self._sentinel)
         mask_f = mask.astype(jnp.float32)
         cnt = jnp.maximum(jnp.sum(mask_f), 1.0)
@@ -554,7 +554,7 @@ class DeviceScaleEngine:
         if fm.may_spike:
             # amplified f̂ deviation feeds straight into Eqn 4's
             # 1/(1+|Δf̂|) normalization
-            tw_m = fm.spike_twins(kflt, tw_m, mask)
+            tw_m = fm.spike_twins(kflt, tw_m, mask, members)
         b = belief(tw_m, q, spec.channel.pkt_fail, div)
         rep_m = update_reputation(
             state.rep.at[members].get(mode="fill", fill_value=1.0), b,
@@ -584,7 +584,8 @@ class DeviceScaleEngine:
         true_freq = (twins.freq + twins.freq_dev).at[members].get(
             mode="fill", fill_value=1.0)
         ch_m = state.channel.at[members].get(mode="fill", fill_value=0)
-        e = round_energy(a.astype(jnp.float32), true_freq, ch_m, ke) * mask_f
+        e = round_energy(a.astype(jnp.float32), true_freq, ch_m, ke,
+                         members=members) * mask_f
         consumed = jnp.sum(e)
         twins = observe_round_members(twins, members, losses, e,
                                       self._misbehaving_dev)
@@ -633,7 +634,7 @@ class DeviceScaleEngine:
         dur = a.astype(jnp.float32) / jnp.maximum(
             self._cluster_freq_table(twins)[c], 1e-6)
         if fm.may_straggle:
-            dur = fm.straggle(kflt, dur, mask)
+            dur = fm.straggle(kflt, dur, mask, members)
 
         new_state = FleetState(
             twins=twins, rep=rep, channel=channel, cluster_params=cparams,

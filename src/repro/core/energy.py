@@ -37,32 +37,47 @@ def compute_energy(freq, params: ChannelParams = ChannelParams()):
     return params.n_cmp * params.train_cycles / jnp.maximum(freq, 1e-3)
 
 
-def channel_rate(state, key, params: ChannelParams = ChannelParams()):
+def channel_rate(state, key, params: ChannelParams = ChannelParams(),
+                 members=None):
     """Shannon rate per client given channel state (n,) in {0,1,2}.
-    Noise ~ Poisson with the state's mean influence (paper §V)."""
+    Noise ~ Poisson with the state's mean influence (paper §V).
+
+    With ``members`` (the device ids behind each slot of ``state``) the
+    noise draw is keyed per device id via `fold_in` instead of shaped by
+    ``state.shape`` — a device's channel noise is then invariant to the
+    padded membership width, which is what pins padded, sharded, and
+    population-stacked rounds to the same realization."""
     lam = NOISE_MEAN_DB[state]
-    noise_db = jax.random.poisson(key, lam, state.shape).astype(jnp.float32) + lam
+    if members is None:
+        noise = jax.random.poisson(key, lam, state.shape)
+    else:
+        noise = jax.vmap(
+            lambda m, l: jax.random.poisson(jax.random.fold_in(key, m),
+                                            l, ()))(members, lam)
+    noise_db = noise.astype(jnp.float32) + lam
     noise = 10.0 ** (noise_db / 10.0) * 1e-7
     snr = params.tx_power * params.gain / noise
     frac = 1.0 / params.n_subchannels
     return params.n_subchannels * frac * params.bandwidth * jnp.log2(1.0 + snr)
 
 
-def comm_energy(state, key, params: ChannelParams = ChannelParams()):
+def comm_energy(state, key, params: ChannelParams = ChannelParams(),
+                members=None):
     """Eqn 8 per aggregation upload, vectorized over clients."""
-    rate = channel_rate(state, key, params)
+    rate = channel_rate(state, key, params, members=members)
     return params.n_com * params.model_bits / jnp.maximum(rate, 1.0)
 
 
 def round_energy(a, true_freq, channel_state, key,
-                 params: ChannelParams = ChannelParams()):
+                 params: ChannelParams = ChannelParams(), members=None):
     """Eqns 7+8 for one cluster round: ``a`` local trainings plus one
     upload, per member.  ``a`` may be a traced scalar (the fused round
     applies the Alg.-2 tolerance bound inside jit); ``true_freq`` is the
     device's real frequency f + f̂ (the twin's mapped value plus deviation).
-    """
+    ``members`` keys the channel-noise draw per device id (see
+    `channel_rate`)."""
     e_cmp = a * compute_energy(true_freq, params)
-    e_com = comm_energy(channel_state, key, params)
+    e_com = comm_energy(channel_state, key, params, members=members)
     return e_cmp + e_com
 
 

@@ -49,7 +49,13 @@ def learning_quality(updates_flat: jnp.ndarray, mask=None) -> jnp.ndarray:
                    keepdims=True) / cnt
     dist = jnp.linalg.norm(updates_flat - mean, axis=1) * m
     rel = dist / (jnp.sum(dist) + _EPS)
-    return jnp.clip(1.0 - rel * cnt / jnp.maximum(cnt - 1.0, 1.0), _EPS, 1.0)
+    # parenthesized so the count ratio is one value whether `cnt` is a
+    # compile-time constant (standalone engines close over their mask) or a
+    # runtime operand (the population engine vmaps over stacked masks):
+    # XLA folds `rel * cnt / d` into `rel * (cnt/d)` only in the constant
+    # world, which costs a ulp of bit-parity between the two
+    return jnp.clip(1.0 - rel * (cnt / jnp.maximum(cnt - 1.0, 1.0)),
+                    _EPS, 1.0)
 
 
 def gradient_diversity(updates_flat: jnp.ndarray, mask=None) -> jnp.ndarray:

@@ -31,6 +31,19 @@ from .spec import FaultSpec
 _TAG_DROP, _TAG_STRAGGLE, _TAG_SPIKE, _TAG_CORRUPT, _TAG_POISON = range(5)
 
 
+def _member_uniform(key, members):
+    """One U[0,1) per member slot, keyed by the slot's *device id* via
+    `fold_in` — never by the slot's position or the row's width.  A
+    width-shaped draw (``uniform(key, mask.shape)``) realizes different
+    values whenever the padded membership width changes; keying by id makes
+    the stream invariant, so exact-shape, padded, sharded, and
+    population-stacked rounds all see the same per-device faults.  Padding
+    slots (the sentinel id) draw too, and are masked downstream."""
+    return jax.vmap(
+        lambda m: jax.random.uniform(jax.random.fold_in(key, m), ()))(
+            members)
+
+
 def _static_subset(rng: np.random.Generator, n: int, frac: float
                    ) -> jnp.ndarray:
     """(n,) f32 indicator of a fixed ``int(frac*n)``-device subset."""
@@ -115,27 +128,26 @@ class FaultModel:
     def _key(self, kf, tag: int):
         return jax.random.fold_in(jax.random.fold_in(kf, self._seed), tag)
 
-    def drop_mask(self, kf, mask: jnp.ndarray) -> jnp.ndarray:
+    def drop_mask(self, kf, mask: jnp.ndarray, members) -> jnp.ndarray:
         """Bernoulli(dropout) participation failure per member slot."""
-        u = jax.random.uniform(self._key(kf, _TAG_DROP), mask.shape)
+        u = _member_uniform(self._key(kf, _TAG_DROP), members)
         return mask & (u >= self.spec.dropout)
 
-    def straggle(self, kf, dur, mask: jnp.ndarray):
+    def straggle(self, kf, dur, mask: jnp.ndarray, members):
         """Any straggling member multiplies the cluster round duration by
         ``straggler_factor`` — the straggler gates the synchronous local
         phase, matching Alg. 2's min-frequency convention."""
-        u = jax.random.uniform(self._key(kf, _TAG_STRAGGLE), mask.shape)
+        u = _member_uniform(self._key(kf, _TAG_STRAGGLE), members)
         st = (u < self.spec.straggler_frac) & mask
         return dur * jnp.where(jnp.any(st),
                                jnp.float32(self.spec.straggler_factor),
                                jnp.float32(1.0))
 
-    def spike_twins(self, kf, tw_m, mask: jnp.ndarray):
+    def spike_twins(self, kf, tw_m, mask: jnp.ndarray, members):
         """Amplify the DT mapping deviation f̂ of spiked members in the
         (M,)-sliced twin view feeding Eqn 4 — the trust rule's
         deviation-normalized belief is what must absorb this."""
-        u = jax.random.uniform(self._key(kf, _TAG_SPIKE),
-                               tw_m.freq_dev.shape)
+        u = _member_uniform(self._key(kf, _TAG_SPIKE), members)
         sp = (u < self.spec.twin_spike_prob) & mask
         scale = jnp.float32(self.spec.twin_spike_scale)
         return tw_m._replace(
@@ -170,8 +182,14 @@ class FaultModel:
                 nrm = jnp.sqrt(jnp.sum(upd * upd, axis=axes,
                                        keepdims=True) + 1e-12)
                 sz = float(np.prod(upd.shape[1:])) or 1.0
-                noise = jax.random.normal(jax.random.fold_in(kc, i),
-                                          upd.shape, upd.dtype)
+                # per-device keys (fold the member id, not the slot): the
+                # noise a device sees is invariant to the padded row width,
+                # like every other in-jit fault draw here
+                ki = jax.random.fold_in(kc, i)
+                noise = jax.vmap(
+                    lambda m: jax.random.normal(
+                        jax.random.fold_in(ki, m), upd.shape[1:],
+                        upd.dtype))(members)
                 bad = upd + (jnp.asarray(scale, upd.dtype) * nrm
                              / jnp.asarray(np.sqrt(sz), upd.dtype)) * noise
             w = cz.reshape((-1,) + (1,) * (upd.ndim - 1)).astype(upd.dtype)

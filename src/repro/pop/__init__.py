@@ -1,0 +1,18 @@
+"""Population engine: B federations as one vmapped device program.
+
+    from repro.pop import PopulationSpec, PopulationEngine, member_seed
+
+    pspec = PopulationSpec(base=FederationSpec(...),
+                           grid={"lr": [0.05, 0.1]}, replicates=4)
+    traces = PopulationEngine.from_population(pspec).run_scanned(K)
+
+Each returned trace is bit-identical to the standalone
+``Federation.from_spec(member_spec).run_scanned(K)`` run of the matching
+expanded spec.  `python -m repro.serve pool` serves a population across
+checkpointed segments into per-member run dirs.
+"""
+from .engine import PopulationEngine, PopulationMember
+from .spec import PopulationSpec, member_seed
+
+__all__ = ["PopulationEngine", "PopulationMember", "PopulationSpec",
+           "member_seed"]

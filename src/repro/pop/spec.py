@@ -1,0 +1,163 @@
+"""`PopulationSpec`: a declarative sweep of `FederationSpec`s.
+
+A population is B independent federations that share one *structure*
+(shapes, component kinds, static fault gates) and vary in seeds and scalar
+knobs — exactly what `repro.pop.engine.PopulationEngine` can vmap into a
+single device program.  The spec layer mirrors `repro.api.spec`: a plain
+dataclass with strict dict/JSON round-trip, expanded into registry-validated
+member `FederationSpec`s by `expand()`.
+
+Sweep axes compose two ways:
+
+``grid``        dotted-field-path -> list of values; member cells are the
+                cartesian product in key order (``{"lr": [...], "channel.
+                pkt_fail": [...]}``).  Paths traverse nested spec
+                dataclasses and the ``params`` dicts of component specs
+                (``"controller.params.budget"``).
+``replicates``  seed replicates per grid cell — the confidence-interval
+                axis.
+
+Per-member seeds derive from the base seed via `member_seed` (a
+`jax.random.fold_in` fold of the member index — no ad-hoc ``seed + i``
+arithmetic), so member *b* of a population is pinned bit-identical to a
+standalone ``Federation.from_spec`` run of the expanded spec.
+``derive_seeds=False`` keeps the base/grid seed verbatim instead (e.g. the
+robustness grid, which sweeps aggregators *against* a fixed seed).
+
+``sharding`` places the *population* axis on a 1-D mesh (axis name
+defaults to "pop"); member specs themselves are always unsharded — the
+population batch dim is the parallel axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import FederationSpec, ShardingSpec, _from_dict, _NESTED
+
+__all__ = ["PopulationSpec", "member_seed"]
+
+POP_AXIS = "pop"                 # default mesh axis name for the batch dim
+
+
+def member_seed(base_seed: int, b: int) -> int:
+    """The seed of population member ``b``: a `fold_in` of the member index
+    into the base seed's key, reduced to a plain non-negative int32.
+
+    Returns an ordinary Python int so the derived seed is consumable
+    anywhere a spec seed is — a standalone ``Federation.from_spec`` run
+    with ``seed=member_seed(base, b)`` is the bit-parity reference for
+    member ``b`` of the population."""
+    key = jax.random.fold_in(jax.random.key(int(base_seed)), int(b))
+    return int(jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max))
+
+
+def _apply_override(obj, path: str, value):
+    """Set a dotted field path on a nested dataclass/dict tree, returning
+    a replaced copy (the original spec is never mutated)."""
+    head, _, rest = path.partition(".")
+    if isinstance(obj, dict):
+        if rest and head not in obj:
+            raise KeyError(f"grid path {path!r}: no key {head!r} in dict")
+        out = dict(obj)
+        out[head] = _apply_override(obj[head], rest, value) if rest \
+            else value
+        return out
+    if not dataclasses.is_dataclass(obj):
+        raise TypeError(f"grid path {path!r}: cannot descend into "
+                        f"{type(obj).__name__}")
+    names = {f.name for f in dataclasses.fields(obj)}
+    if head not in names:
+        raise KeyError(f"grid path {path!r}: {type(obj).__name__} has no "
+                       f"field {head!r}; valid: {sorted(names)}")
+    new = _apply_override(getattr(obj, head), rest, value) if rest else value
+    return dataclasses.replace(obj, **{head: new})
+
+
+@dataclasses.dataclass
+class PopulationSpec:
+    """B federations from one base spec + sweep axes (module docstring)."""
+    base: FederationSpec
+    grid: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+    replicates: int = 1
+    derive_seeds: bool = True
+    sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def size(self) -> int:
+        n = self.replicates
+        for values in self.grid.values():
+            n *= len(values)
+        return n
+
+    def validate(self) -> "PopulationSpec":
+        if self.replicates < 1:
+            raise ValueError(f"population: replicates={self.replicates} "
+                             "must be >= 1")
+        for path, values in self.grid.items():
+            if not isinstance(values, (list, tuple)) or not len(values):
+                raise ValueError(f"population: grid[{path!r}] must be a "
+                                 "non-empty list of values")
+        if self.sharding.is_sharded:
+            if len(self.sharding.mesh) != 1:
+                raise ValueError(
+                    f"population: sharding shards the population axis only "
+                    f"(1-D mesh); got mesh {self.sharding.mesh}")
+            shards = self.sharding.mesh[0]
+            if self.size % shards:
+                raise ValueError(
+                    f"population: mesh has {shards} shards, which does not "
+                    f"divide the population size {self.size}")
+        if self.base.sharding.is_sharded:
+            raise ValueError(
+                "population: the base spec must be unsharded — the "
+                "population batch axis is the parallel dim (set sharding "
+                "on the PopulationSpec instead)")
+        self.base.validate()
+        return self
+
+    def pop_axis(self) -> str:
+        axes = self.sharding.axes
+        return axes[0] if axes else POP_AXIS
+
+    # ------------------------------------------------------------------ #
+    def expand(self) -> List[FederationSpec]:
+        """Member specs in population order: grid cells in cartesian
+        product order (key order), replicates innermost; each validated."""
+        self.validate()
+        keys = list(self.grid)
+        members: List[FederationSpec] = []
+        for combo in itertools.product(*(self.grid[k] for k in keys)):
+            cell = self.base
+            for path, value in zip(keys, combo):
+                cell = _apply_override(cell, path, value)
+            for _ in range(self.replicates):
+                b = len(members)
+                spec = dataclasses.replace(cell, sharding=ShardingSpec())
+                if self.derive_seeds and "seed" not in keys:
+                    spec = dataclasses.replace(
+                        spec, seed=member_seed(self.base.seed, b))
+                members.append(spec.validate())
+        return members
+
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PopulationSpec":
+        return _from_dict(cls, d, path="population")
+
+    def replace(self, **kw) -> "PopulationSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# strict hydration for the nested spec fields rides the same machinery as
+# FederationSpec.from_dict
+_NESTED[("PopulationSpec", "base")] = FederationSpec
+_NESTED[("PopulationSpec", "sharding")] = ShardingSpec

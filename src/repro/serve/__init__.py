@@ -16,6 +16,8 @@ exercises the whole kill → verify → resume path under supervision
 Prometheus snapshot (API.md "Observability").
 """
 from .chaos import run_supervised, spawn_service
+from .pool import (common_checkpoint_step, load_pool_spec, member_dir,
+                   pool_status, run_pool, write_pool_spec)
 from .runner import (SegmentRunner, latest_resumable, list_resumable,
                      prune_checkpoints, restore_resumable, save_resumable,
                      truncate_jsonl_trace, verify_checkpoint)
@@ -26,4 +28,6 @@ __all__ = ["SegmentRunner", "latest_resumable", "list_resumable",
            "prune_checkpoints", "restore_resumable", "save_resumable",
            "truncate_jsonl_trace", "verify_checkpoint", "RunDir",
            "run_service", "service_status", "run_supervised",
-           "spawn_service", "load_run_metrics", "last_spans"]
+           "spawn_service", "load_run_metrics", "last_spans",
+           "run_pool", "pool_status", "member_dir", "load_pool_spec",
+           "write_pool_spec", "common_checkpoint_step"]

@@ -133,6 +133,34 @@ def build_parser() -> argparse.ArgumentParser:
                    help="seconds to wait for the final segment + "
                         "checkpoint")
 
+    p = sub.add_parser(
+        "pool", help="multi-tenant supervisor: one process drives a "
+                     "population of federations into per-member run dirs")
+    pool_sub = p.add_subparsers(dest="pool_cmd", required=True)
+    p = loop_flags(common(pool_sub.add_parser(
+        "start", help="start a fresh pool instance")))
+    p.add_argument("--scenario", default="autoencoder-anomaly",
+                   help="base-spec scenario preset (ignored when the run "
+                        "dir already has pool.json)")
+    p.add_argument("--seed", type=int, default=None,
+                   help="base seed (member seeds derive via fold_in)")
+    p.add_argument("--replicates", type=int, default=4,
+                   help="seed replicates of the base spec (population "
+                        "size when no --spec-file grid)")
+    p.add_argument("--spec-file", default=None,
+                   help="PopulationSpec JSON file instead of --scenario")
+    loop_flags(common(pool_sub.add_parser(
+        "resume", help="continue a stopped pool from the newest common "
+                       "verified checkpoint")))
+    p = common(pool_sub.add_parser(
+        "status", help="print pool status JSON (per-member summary)"))
+    p.add_argument("--tail", type=int, default=1,
+                   help="trace records per member to include")
+    p = common(pool_sub.add_parser("stop", help="stop a running pool"))
+    p.add_argument("--timeout", type=float, default=300.0,
+                   help="seconds to wait for the final segment + "
+                        "checkpoint sweep")
+
     p = common(sub.add_parser(
         "chaos", help="supervised crash-recovery harness: run to N "
                       "segments, SIGKILLing the service along the way"))
@@ -364,11 +392,95 @@ def cmd_chaos(args) -> int:
     return 0
 
 
+# --------------------------------------------------------------------- #
+# pool (multi-tenant) commands
+# --------------------------------------------------------------------- #
+def _resolve_pool_spec(args):
+    from repro.api import scenarios  # noqa: F401  (populates SCENARIOS)
+    from repro.api.registry import SCENARIOS
+    from repro.pop import PopulationSpec
+    if args.spec_file:
+        with open(args.spec_file) as f:
+            pspec = PopulationSpec.from_dict(json.load(f))
+    else:
+        base = SCENARIOS.get(args.scenario)()
+        pspec = PopulationSpec(base=base, replicates=args.replicates)
+    if args.seed is not None:
+        pspec = pspec.replace(base=pspec.base.replace(seed=args.seed))
+    return pspec.validate()
+
+
+def cmd_pool_start(args) -> int:
+    from .pool import (POOL_SPEC_FILE, common_checkpoint_step,
+                       ensure_pool_dir, load_pool_spec, run_pool,
+                       write_pool_spec)
+    rd = ensure_pool_dir(args.run_dir)
+    if _refuse_if_running(rd):
+        return 1
+    keep = args.keep if args.keep > 0 else None
+    if not os.path.exists(rd.path(POOL_SPEC_FILE)):
+        try:
+            write_pool_spec(rd.root, _resolve_pool_spec(args))
+        except (KeyError, ValueError, OSError) as e:
+            print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+            return 1
+    pspec = load_pool_spec(rd.root)
+    dirs = [os.path.join(rd.root, "members", f"{b:03d}")
+            for b in range(pspec.size)]
+    if common_checkpoint_step(dirs) is not None:
+        print(f"error: {rd.root} already has member checkpoints; use "
+              "`python -m repro.serve pool resume` (or a fresh "
+              "--run-dir)", file=sys.stderr)
+        return 1
+    if not args.foreground:
+        return _spawn(rd, ["pool", "start"] + _loop_argv(args))
+    run_pool(rd.root, segment_rounds=args.segment_rounds,
+             max_segments=args.max_segments, keep=keep, resume=False)
+    return 0
+
+
+def cmd_pool_resume(args) -> int:
+    from .pool import (common_checkpoint_step, load_pool_spec, run_pool)
+    rd = RunDir(args.run_dir)
+    if _refuse_if_running(rd):
+        return 1
+    try:
+        pspec = load_pool_spec(rd.root)
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    dirs = [os.path.join(rd.root, "members", f"{b:03d}")
+            for b in range(pspec.size)]
+    if common_checkpoint_step(dirs) is None:
+        print(f"error: no common verified checkpoint across the "
+              f"{pspec.size} member dirs under {rd.root}",
+              file=sys.stderr)
+        return 1
+    keep = args.keep if args.keep > 0 else None
+    if not args.foreground:
+        return _spawn(rd, ["pool", "resume"] + _loop_argv(args))
+    run_pool(rd.root, segment_rounds=args.segment_rounds,
+             max_segments=args.max_segments, keep=keep, resume=True)
+    return 0
+
+
+def cmd_pool_status(args) -> int:
+    from .pool import pool_status
+    print(json.dumps(pool_status(args.run_dir, tail=args.tail), indent=2))
+    return 0
+
+
+def cmd_pool(args) -> int:
+    return {"start": cmd_pool_start, "resume": cmd_pool_resume,
+            "status": cmd_pool_status,
+            "stop": cmd_stop}[args.pool_cmd](args)
+
+
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     return {"start": cmd_start, "resume": cmd_resume,
             "status": cmd_status, "metrics": cmd_metrics,
-            "checkpoint": cmd_checkpoint,
+            "checkpoint": cmd_checkpoint, "pool": cmd_pool,
             "stop": cmd_stop, "chaos": cmd_chaos}[args.cmd](args)
 
 
